@@ -1,0 +1,56 @@
+"""Compiler-layer CAS delta caching (paper §3.1: 'only updates the delta of
+the instruction and retains the unchanged parts').
+
+Simulates a research group iterating on a training script against a large
+frozen dependency+dataset payload: measures bytes shipped and compile-layer
+wall time, cold vs warm.
+"""
+from __future__ import annotations
+
+import os
+import random
+import string
+import tempfile
+import time
+
+from repro.core import ResourceSpec, RuntimeEnv, TaskSpec
+from repro.core.compiler import ArtifactStore, TaskCompiler
+
+
+def payload(mb: float, seed: int) -> str:
+    rng = random.Random(seed)
+    return "".join(rng.choices(string.ascii_letters, k=int(mb * 2**20)))
+
+
+def main(n_iters: int = 8, dep_mb: float = 4.0):
+    with tempfile.TemporaryDirectory() as td:
+        store = ArtifactStore(td + "/cas")
+        compiler = TaskCompiler(store, td + "/work")
+        deps = payload(dep_mb, 0)
+        data = payload(dep_mb / 2, 1)
+        rows = []
+        for i in range(n_iters):
+            code = f"# revision {i}\n" + payload(0.01, 100 + i)
+            spec = TaskSpec(name=f"iter{i}",
+                            runtime=RuntimeEnv(backend="shell"),
+                            artifacts={"main": code, "deps": deps,
+                                       "data": data},
+                            resources=ResourceSpec(chips=8), total_steps=1)
+            t0 = time.time()
+            plan = compiler.compile(spec)
+            dt = time.time() - t0
+            r = plan.cache_report
+            rows.append((i, r["new_bytes"], r["cached_bytes"], dt))
+        total = (len(deps) + len(data)) * n_iters
+        shipped = sum(r[1] for r in rows)
+        print(f"{'iter':>4s} {'new_bytes':>12s} {'cached_bytes':>12s} "
+              f"{'compile_ms':>10s}")
+        for i, nb, cb, dt in rows:
+            print(f"{i:4d} {nb:12d} {cb:12d} {dt*1000:10.1f}")
+        print(f"\ndelta-cache saved {1 - shipped/ (total + shipped):.1%} of "
+              f"{(total+shipped)/2**20:.1f} MiB total artifact traffic")
+        return rows
+
+
+if __name__ == "__main__":
+    main()

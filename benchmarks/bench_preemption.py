@@ -1,0 +1,86 @@
+"""Checkpoint-then-preempt overhead (Execution Layer).
+
+Real measurements: checkpoint save (sync + async) and restore wall time for
+growing model sizes, plus the simulated end-to-end JCT penalty of a
+preemption at different checkpoint intervals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import Checkpointer, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.train import OptConfig, init_train_state
+
+
+def measure_ckpt(d_model: int, n_layers_mult: int = 2):
+    cfg = get_config("tacc-100m", smoke=True).smoke(
+        d_model=d_model, n_heads=4, n_kv_heads=2, head_dim=d_model // 4,
+        d_ff=d_model * 4, vocab_size=4096)
+    state = init_train_state(cfg, OptConfig(), jax.random.PRNGKey(0))
+    n_bytes = sum(x.nbytes for x in jax.tree.leaves(state))
+    with tempfile.TemporaryDirectory() as td:
+        t0 = time.time()
+        save_checkpoint(td, 1, state)
+        t_sync = time.time() - t0
+        ck = Checkpointer(td, keep=2)
+        t0 = time.time()
+        ck.save(2, state)                       # async: returns immediately
+        t_async_submit = time.time() - t0
+        ck.wait()
+        t0 = time.time()
+        restore_checkpoint(td, 2)
+        t_restore = time.time() - t0
+    return n_bytes, t_sync, t_async_submit, t_restore
+
+
+def sim_preemption_penalty():
+    """JCT overhead of one preemption vs checkpoint interval (virtual time)."""
+    from repro.core import (Cluster, ClusterSim, Job, ResourceSpec,
+                            RuntimeEnv, SimConfig, TaskSpec, make_policy)
+    from repro.core.compiler import ArtifactStore, TaskCompiler
+    rows = []
+    for interval in (10, 30, 60, 120):
+        with tempfile.TemporaryDirectory() as td:
+            comp = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
+            cluster = Cluster(n_pods=1, hosts_per_pod=8, chips_per_host=4)
+            sim = ClusterSim(cluster, make_policy("priority"), SimConfig(
+                checkpoint_interval_s=interval, checkpoint_cost_s=2,
+                restart_cost_s=10))
+            low = TaskSpec(name="low", resources=ResourceSpec(chips=32),
+                           runtime=RuntimeEnv(backend="shell"),
+                           entry={"work_per_step": 28.0}, total_steps=300,
+                           estimated_duration_s=300)
+            hi = TaskSpec(name="hi",
+                          resources=ResourceSpec(chips=16, priority=10),
+                          runtime=RuntimeEnv(backend="shell"),
+                          entry={"work_per_step": 14.0}, total_steps=60,
+                          estimated_duration_s=60)
+            sim.submit(Job(id="low", plan=comp.compile(low), submit_time=0.0))
+            sim.submit(Job(id="hi", plan=comp.compile(hi), submit_time=100.0))
+            sim.run()
+            j = sim.jobs["low"]
+            rows.append((interval, j.end_time, j.preemptions))
+    base = min(r[1] for r in rows)
+    print(f"\n{'ckpt_interval_s':>15s} {'victim_jct':>10s} {'overhead%':>10s}")
+    for interval, end, pre in rows:
+        print(f"{interval:15d} {end:10.0f} {100*(end-base)/base:10.1f}")
+    return rows
+
+
+def main():
+    print(f"{'state_MiB':>10s} {'save_s':>8s} {'async_submit_s':>14s} "
+          f"{'restore_s':>10s}")
+    for d in (64, 128, 256, 512):
+        n, ts, ta, tr = measure_ckpt(d)
+        print(f"{n/2**20:10.1f} {ts:8.3f} {ta:14.4f} {tr:10.3f}")
+    sim_preemption_penalty()
+
+
+if __name__ == "__main__":
+    main()

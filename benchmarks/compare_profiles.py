@@ -1,0 +1,79 @@
+"""Baseline vs optimized profile comparison (§Perf deliverable).
+
+Reads two dry-run artifact dirs (paper-faithful baseline and the optimized
+profile), runs the roofline extrapolation on both, and emits a per-cell
+before/after table of the three roofline terms + per-chip HBM.
+
+  PYTHONPATH=src python -m benchmarks.compare_profiles \
+      --baseline artifacts/dryrun --optimized artifacts/dryrun_opt
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from benchmarks.roofline import analyse_cell
+
+
+def load(art_dir: str) -> Dict:
+    out = {}
+    for p in sorted(glob.glob(os.path.join(art_dir, "*__single.json"))):
+        cell = json.load(open(p))
+        r = analyse_cell(cell)
+        if r:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt(x: Optional[float]) -> str:
+    return f"{x:.3e}" if x is not None else "—"
+
+
+def delta(b, o, key) -> str:
+    if b is None or o is None:
+        return "—"
+    vb, vo = b[key], o[key]
+    if vb <= 0:
+        return "—"
+    return f"{vb:.2e}→{vo:.2e} ({(1 - vo / vb) * +100:+.0f}%)"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="artifacts/dryrun")
+    ap.add_argument("--optimized", default="artifacts/dryrun_opt")
+    ap.add_argument("--out", default="artifacts/roofline/perf_compare.md")
+    args = ap.parse_args()
+    base = load(args.baseline)
+    opt = load(args.optimized)
+    keys = sorted(set(base) | set(opt))
+    lines = ["| arch | shape | compute s (b→o) | memory s (b→o) | "
+             "collective s (b→o) | HBM GiB/chip (b→o) | dominant (b→o) | "
+             "roofline frac (b→o) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for k in keys:
+        b, o = base.get(k), opt.get(k)
+        if b is None and o is None:
+            continue
+        dom = f"{b['dominant'] if b else '—'}→{o['dominant'] if o else '—'}"
+        rf = (f"{b['roofline_fraction']:.2f}→{o['roofline_fraction']:.2f}"
+              if b and o else "—")
+        hbm = (f"{b['hbm_per_chip_gib']:.1f}→{o['hbm_per_chip_gib']:.1f}"
+               if b and o else "—")
+        lines.append(
+            f"| {k[0]} | {k[1]} "
+            f"| {delta(b, o, 't_compute_s')} "
+            f"| {delta(b, o, 't_memory_s')} "
+            f"| {delta(b, o, 't_collective_s')} "
+            f"| {hbm} | {dom} | {rf} |")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("\n".join(lines))
+
+
+if __name__ == "__main__":
+    main()

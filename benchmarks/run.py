@@ -1,0 +1,86 @@
+"""Benchmark harness entry point: one section per paper claim + the roofline
+table from the dry-run artifacts. ``python -m benchmarks.run``"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def section(title):
+    print(f"\n{'='*72}\n== {title}\n{'='*72}", flush=True)
+
+
+def main() -> None:
+    t0 = time.time()
+    failures = []
+
+    section("Scheduler policies (paper §3.1 scheduling layer)")
+    try:
+        from benchmarks import bench_scheduler
+        bench_scheduler.main()
+    except Exception:
+        failures.append("scheduler")
+        traceback.print_exc()
+
+    section("Compiler CAS delta caching (paper §3.1 compiler layer)")
+    try:
+        from benchmarks import bench_cache
+        bench_cache.main()
+    except Exception:
+        failures.append("cache")
+        traceback.print_exc()
+
+    section("Checkpoint-then-preempt overhead (execution layer)")
+    try:
+        from benchmarks import bench_preemption
+        bench_preemption.main()
+    except Exception:
+        failures.append("preemption")
+        traceback.print_exc()
+
+    section("Goodput-elastic vs static allocation")
+    try:
+        from benchmarks import bench_elastic
+        bench_elastic.main()
+    except Exception:
+        failures.append("elastic")
+        traceback.print_exc()
+
+    section("Pallas kernels (interpret-mode)")
+    try:
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+    except Exception:
+        failures.append("kernels")
+        traceback.print_exc()
+
+    section("Serving engine (continuous batching)")
+    try:
+        from benchmarks import bench_serving
+        bench_serving.main()
+    except Exception:
+        failures.append("serving")
+        traceback.print_exc()
+
+    section("Roofline (from dry-run artifacts)")
+    try:
+        from benchmarks import roofline
+        if os.path.isdir("artifacts/dryrun"):
+            roofline.main()
+        else:
+            print("no artifacts/dryrun — run "
+                  "`python -m repro.launch.dryrun --all --variants` first")
+    except Exception:
+        failures.append("roofline")
+        traceback.print_exc()
+
+    print(f"\nbenchmarks done in {time.time()-t0:.0f}s; "
+          f"failures: {failures or 'none'}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""TACC reference workload: ~110M dense LM used by the end-to-end cluster
+examples (the paper itself defines no model; this is the 'few hundred steps
+of a ~100M model' driver workload)."""
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="tacc-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=32768,
+    period=(LayerSpec("attn", "dense"),),
+    rope_theta=1.0e4,
+)
+
+SMOKE = CONFIG.smoke()

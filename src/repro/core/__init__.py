@@ -1,0 +1,19 @@
+"""The paper's primary contribution: TACC's 4-layer task workflow abstraction.
+
+  schema.py    — layer 1: self-contained task specs (reproducibility hashes)
+  compiler.py  — layer 2: spec -> ExecutionPlan, CAS delta caching
+  scheduler.py — layer 3: fifo/backfill/fair/priority/goodput policies
+  executor.py  — layer 4: jax_train / jax_serve / shell runtimes
+  cluster.py   — pods/hosts/chips model, gang placement, failures, stragglers
+  sim.py       — discrete-event simulator for the scheduler benchmarks
+  service.py   — the real local control loop (drives actual JAX work)
+  tcloud.py    — lifecycle CLI
+"""
+from repro.core.schema import ResourceSpec, RuntimeEnv, TaskSpec, SpecError
+from repro.core.compiler import ArtifactStore, ExecutionPlan, TaskCompiler
+from repro.core.cluster import Cluster, Node
+from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
+                                  Start, make_policy, POLICIES)
+from repro.core.sim import ClusterSim, SimConfig, SimEvent
+from repro.core.executor import LocalExecutor
+from repro.core.service import TACC

@@ -1,0 +1,168 @@
+"""Cluster model: pods -> hosts -> chips, gang allocation, failures,
+stragglers.
+
+Models a multi-pod TPU fleet (default 2 pods x 64 hosts x 4 chips = 512
+chips). Gang allocation is all-or-nothing; placement prefers a single pod
+(collectives stay on intra-pod ICI) and otherwise splits across as few pods
+as possible. The same object backs the discrete-event simulator and the real
+local executor.
+
+Invariants (property-tested):
+  - sum of per-node allocations never exceeds node capacity,
+  - unhealthy/draining nodes never receive allocations,
+  - release() returns exactly what was allocated.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Node:
+    id: str
+    pod: int
+    chips: int = 4
+    used: int = 0
+    healthy: bool = True
+    draining: bool = False
+    speed: float = 1.0            # <1.0 = straggler
+
+    @property
+    def free(self) -> int:
+        return 0 if (not self.healthy or self.draining) else self.chips - self.used
+
+
+Allocation = List[Tuple[str, int]]    # [(node_id, n_chips), ...]
+
+
+class Cluster:
+    def __init__(self, n_pods: int = 2, hosts_per_pod: int = 64,
+                 chips_per_host: int = 4):
+        self.n_pods = n_pods
+        self.chips_per_host = chips_per_host
+        self.nodes: Dict[str, Node] = {}
+        for p in range(n_pods):
+            for h in range(hosts_per_pod):
+                nid = f"pod{p}/host{h:03d}"
+                self.nodes[nid] = Node(nid, p, chips_per_host)
+        self.allocations: Dict[str, Allocation] = {}
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def total_chips(self) -> int:
+        return sum(n.chips for n in self.nodes.values() if n.healthy)
+
+    def free_chips(self, pod: Optional[int] = None) -> int:
+        return sum(n.free for n in self.nodes.values()
+                   if pod is None or n.pod == pod)
+
+    def used_chips(self) -> int:
+        return sum(n.used for n in self.nodes.values())
+
+    def utilization(self) -> float:
+        t = self.total_chips
+        return self.used_chips() / t if t else 0.0
+
+    # -- allocation ----------------------------------------------------------
+
+    def try_allocate(self, job_id: str, chips: int,
+                     prefer_single_pod: bool = True) -> Optional[Allocation]:
+        """Gang (all-or-nothing) allocation. Returns None if it doesn't fit."""
+        if job_id in self.allocations:
+            raise ValueError(f"{job_id} already allocated")
+        if chips > self.free_chips():
+            return None
+        pods = sorted(range(self.n_pods), key=lambda p: -self.free_chips(p))
+        # single-pod placement if any pod fits
+        if prefer_single_pod:
+            for p in pods:
+                if self.free_chips(p) >= chips:
+                    alloc = self._take(chips, [p])
+                    self.allocations[job_id] = alloc
+                    return alloc
+        alloc = self._take(chips, pods)
+        if alloc is None:
+            return None
+        self.allocations[job_id] = alloc
+        return alloc
+
+    def _take(self, chips: int, pods: List[int]) -> Optional[Allocation]:
+        picked: Allocation = []
+        need = chips
+        for p in pods:
+            nodes = sorted((n for n in self.nodes.values()
+                            if n.pod == p and n.free > 0),
+                           key=lambda n: (-n.free, n.id))
+            for n in nodes:
+                take = min(n.free, need)
+                picked.append((n.id, take))
+                need -= take
+                if need == 0:
+                    break
+            if need == 0:
+                break
+        if need > 0:
+            return None
+        for nid, k in picked:
+            self.nodes[nid].used += k
+        return picked
+
+    def release(self, job_id: str) -> None:
+        for nid, k in self.allocations.pop(job_id, []):
+            n = self.nodes[nid]
+            n.used = max(0, n.used - k)
+
+    # -- topology ------------------------------------------------------------
+
+    def job_pods(self, job_id: str) -> List[int]:
+        return sorted({self.nodes[nid].pod
+                       for nid, _ in self.allocations.get(job_id, [])})
+
+    def crosses_pods(self, job_id: str) -> bool:
+        return len(self.job_pods(job_id)) > 1
+
+    def job_speed(self, job_id: str) -> float:
+        """Synchronous training runs at the slowest participant's speed."""
+        alloc = self.allocations.get(job_id, [])
+        if not alloc:
+            return 0.0
+        return min(self.nodes[nid].speed for nid, _ in alloc)
+
+    def job_nodes(self, job_id: str) -> List[str]:
+        return [nid for nid, _ in self.allocations.get(job_id, [])]
+
+    # -- failures / stragglers ------------------------------------------------
+
+    def fail_node(self, node_id: str) -> List[str]:
+        """Marks a node dead. Returns job ids that were running on it."""
+        node = self.nodes[node_id]
+        node.healthy = False
+        victims = [jid for jid, alloc in self.allocations.items()
+                   if any(nid == node_id for nid, _ in alloc)]
+        return victims
+
+    def recover_node(self, node_id: str) -> None:
+        n = self.nodes[node_id]
+        n.healthy = True
+        n.used = 0
+        n.speed = 1.0
+        n.draining = False
+
+    def set_speed(self, node_id: str, speed: float) -> None:
+        self.nodes[node_id].speed = speed
+
+    def drain(self, node_id: str, on: bool = True) -> None:
+        self.nodes[node_id].draining = on
+
+    def straggler_nodes(self, job_id: str, threshold: float = 0.75
+                        ) -> List[str]:
+        nodes = self.job_nodes(job_id)
+        if not nodes:
+            return []
+        speeds = sorted(self.nodes[n].speed for n in nodes)
+        median = speeds[len(speeds) // 2]
+        return [n for n in nodes
+                if self.nodes[n].speed < threshold * median]

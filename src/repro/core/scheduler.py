@@ -1,0 +1,347 @@
+"""Scheduling Layer (TACC §3.1, layer 3).
+
+Online multi-tenant queue with pluggable policies — the set the paper names
+from its Slurm backbone, implemented natively so they compose with the
+checkpoint-based preemption of the Execution Layer:
+
+  - ``fifo``            strict arrival order (exposes head-of-line blocking)
+  - ``backfill``        EASY backfill: reservation for the head job from
+                        runtime estimates; later jobs may jump the queue only
+                        if they cannot delay the reservation
+  - ``fair``            weighted fair-share across tenants (lowest normalized
+                        decayed usage first) + per-tenant quotas
+  - ``priority``        priority scheduling with checkpoint-then-preempt of
+                        lower-priority preemptible jobs
+  - ``goodput``         Pollux-style goodput-aware elastic sizing: chips are
+                        assigned by greedy marginal-goodput, jobs resize live
+
+Policies return Actions; the driver (sim or real executor) applies them, so a
+policy never mutates cluster state directly.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import Cluster
+from repro.core.compiler import ExecutionPlan
+
+
+class JobState(str, Enum):
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    COMPLETED = "COMPLETED"
+    FAILED = "FAILED"
+    KILLED = "KILLED"
+
+
+@dataclass
+class Job:
+    id: str
+    plan: ExecutionPlan
+    submit_time: float
+    state: JobState = JobState.PENDING
+    chips: int = 0                    # currently granted
+    progress: float = 0.0             # steps completed
+    ckpt_progress: float = 0.0        # last checkpointed step
+    start_time: Optional[float] = None
+    first_start: Optional[float] = None
+    end_time: Optional[float] = None
+    preemptions: int = 0
+    restarts: int = 0
+    events: List[Tuple[float, str]] = field(default_factory=list)
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def spec(self):
+        return self.plan.spec
+
+    @property
+    def tenant(self) -> str:
+        return self.spec.tenant
+
+    @property
+    def priority(self) -> int:
+        return self.spec.resources.priority
+
+    @property
+    def requested(self) -> int:
+        return self.plan.mesh_request["chips"]
+
+    @property
+    def min_chips(self) -> int:
+        return min(self.plan.mesh_request["min_chips"], self.requested)
+
+    @property
+    def total_steps(self) -> int:
+        return self.spec.total_steps
+
+    @property
+    def elastic(self) -> bool:
+        return self.min_chips < self.requested
+
+    def log(self, t: float, msg: str) -> None:
+        self.events.append((t, msg))
+
+    def remaining_estimate(self, now: float) -> float:
+        """Estimated absolute completion time (for backfill reservations)."""
+        frac = 1.0 - (self.progress / max(self.total_steps, 1))
+        return now + max(frac, 0.0) * self.spec.estimated_duration_s
+
+    # throughput model: steps/s at n chips. W = per-step chip-seconds of
+    # compute; alpha = communication fraction (from the roofline collective
+    # term when available); cross-pod collectives pay 2x.
+    def steps_per_s(self, n: int, cross_pod: bool = False) -> float:
+        if n <= 0:
+            return 0.0
+        entry = self.spec.entry
+        w = float(entry.get("work_per_step", 1.0))
+        alpha = float(entry.get("comm_frac", 0.05))
+        comm = w * alpha * (n - 1) / n * (2.0 if cross_pod else 1.0)
+        return 1.0 / (w * (1 - alpha) / n + comm + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Actions
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Start:
+    job_id: str
+    chips: int
+
+
+@dataclass
+class Preempt:
+    job_id: str
+    reason: str = "priority"
+
+
+@dataclass
+class Resize:
+    job_id: str
+    chips: int
+
+
+Action = object
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+class Policy:
+    name = "base"
+
+    def __init__(self, quotas: Optional[Dict[str, int]] = None,
+                 tenant_weights: Optional[Dict[str, float]] = None):
+        self.quotas = quotas or {}
+        self.weights = tenant_weights or {}
+        self.usage: Dict[str, float] = {}     # decayed chip-seconds / tenant
+
+    # bookkeeping called by the driver every tick
+    def account(self, dt: float, running: List[Job], decay: float = 0.999):
+        for t in self.usage:
+            self.usage[t] *= decay ** dt
+        for j in running:
+            self.usage[j.tenant] = self.usage.get(j.tenant, 0.0) + j.chips * dt
+
+    def _quota_ok(self, job: Job, running: List[Job], chips: int) -> bool:
+        q = self.quotas.get(job.tenant)
+        if q is None:
+            return True
+        used = sum(j.chips for j in running if j.tenant == job.tenant)
+        return used + chips <= q
+
+    def schedule(self, now: float, pending: List[Job], running: List[Job],
+                 cluster: Cluster) -> List[Action]:
+        raise NotImplementedError
+
+
+class FIFO(Policy):
+    name = "fifo"
+
+    def schedule(self, now, pending, running, cluster):
+        actions: List[Action] = []
+        free = cluster.free_chips()
+        for job in sorted(pending, key=lambda j: j.submit_time):
+            if job.requested <= free and self._quota_ok(job, running, job.requested):
+                actions.append(Start(job.id, job.requested))
+                free -= job.requested
+            else:
+                break                      # strict FIFO: no overtaking
+        return actions
+
+
+class EASYBackfill(Policy):
+    name = "backfill"
+
+    def schedule(self, now, pending, running, cluster):
+        actions: List[Action] = []
+        queue = sorted(pending, key=lambda j: j.submit_time)
+        free = cluster.free_chips()
+        started: List[Job] = []
+        while queue:
+            head = queue[0]
+            if head.requested <= free and self._quota_ok(head, running + started,
+                                                         head.requested):
+                actions.append(Start(head.id, head.requested))
+                started.append(head)
+                free -= head.requested
+                queue.pop(0)
+                continue
+            break
+        if not queue:
+            return actions
+        head = queue[0]
+        # reservation: when will enough chips free up for the head job?
+        releases = sorted(
+            (j.remaining_estimate(now), j.chips) for j in running
+            if j.chips > 0)
+        avail = free
+        reserve_at = float("inf")
+        for t_rel, chips in releases:
+            avail += chips
+            if avail >= head.requested:
+                reserve_at = t_rel
+                break
+        # backfill: a later job may start iff it fits now AND finishes
+        # before the reservation (or uses chips the head doesn't need)
+        shadow_free = free
+        for job in queue[1:]:
+            fits = job.requested <= shadow_free
+            ends_before = now + job.spec.estimated_duration_s <= reserve_at
+            spare = shadow_free - head.requested >= job.requested
+            if fits and (ends_before or spare) and \
+                    self._quota_ok(job, running + started, job.requested):
+                actions.append(Start(job.id, job.requested))
+                started.append(job)
+                shadow_free -= job.requested
+        return actions
+
+
+class FairShare(Policy):
+    name = "fair"
+
+    def schedule(self, now, pending, running, cluster):
+        actions: List[Action] = []
+        free = cluster.free_chips()
+        started: List[Job] = []
+
+        def share(job: Job) -> float:
+            w = self.weights.get(job.tenant, 1.0)
+            return self.usage.get(job.tenant, 0.0) / max(w, 1e-9)
+
+        for job in sorted(pending, key=lambda j: (share(j), j.submit_time)):
+            if job.requested <= free and \
+                    self._quota_ok(job, running + started, job.requested):
+                actions.append(Start(job.id, job.requested))
+                started.append(job)
+                free -= job.requested
+        return actions
+
+
+class PriorityPreempt(Policy):
+    name = "priority"
+
+    def schedule(self, now, pending, running, cluster):
+        actions: List[Action] = []
+        free = cluster.free_chips()
+        preempted: set = set()
+        started: List[Job] = []
+        for job in sorted(pending, key=lambda j: (-j.priority, j.submit_time)):
+            if not self._quota_ok(job, running + started, job.requested):
+                continue
+            if job.requested <= free:
+                actions.append(Start(job.id, job.requested))
+                started.append(job)
+                free -= job.requested
+                continue
+            # try checkpoint-then-preempt of strictly lower-priority jobs
+            victims = sorted(
+                (j for j in running
+                 if j.priority < job.priority and j.id not in preempted
+                 and j.spec.resources.preemptible),
+                key=lambda j: (j.priority, -j.start_time if j.start_time else 0))
+            gain = free
+            chosen = []
+            for v in victims:
+                chosen.append(v)
+                gain += v.chips
+                if gain >= job.requested:
+                    break
+            if gain >= job.requested:
+                for v in chosen:
+                    actions.append(Preempt(v.id))
+                    preempted.add(v.id)
+                actions.append(Start(job.id, job.requested))
+                started.append(job)
+                free = gain - job.requested
+        return actions
+
+
+class GoodputElastic(Policy):
+    """Pollux-style: distribute chips by greedy marginal goodput; elastic jobs
+    resize live (checkpoint-resize-resume in the execution layer)."""
+    name = "goodput"
+
+    def __init__(self, *args, rebalance_every: float = 30.0, **kw):
+        super().__init__(*args, **kw)
+        self.rebalance_every = rebalance_every
+        self._last = -1e9
+
+    def schedule(self, now, pending, running, cluster):
+        if now - self._last < self.rebalance_every and not pending:
+            return []
+        self._last = now
+        jobs = [j for j in running + pending
+                if j.state in (JobState.RUNNING, JobState.PENDING)]
+        if not jobs:
+            return []
+        total = cluster.total_chips
+        grant = {j.id: 0 for j in jobs}
+        # seed each job with min_chips in arrival order while they fit
+        budget = total
+        for j in sorted(jobs, key=lambda j: j.submit_time):
+            need = j.min_chips if j.elastic else j.requested
+            if need <= budget:
+                grant[j.id] = need
+                budget -= need
+        # greedy marginal goodput on elastic jobs
+        import heapq
+        heap = []
+        for j in jobs:
+            if j.elastic and grant[j.id] and grant[j.id] < j.requested:
+                d = j.steps_per_s(grant[j.id] + 1) - j.steps_per_s(grant[j.id])
+                heapq.heappush(heap, (-d, j.submit_time, j.id))
+        by_id = {j.id: j for j in jobs}
+        while budget > 0 and heap:
+            _, _, jid = heapq.heappop(heap)
+            j = by_id[jid]
+            grant[jid] += 1
+            budget -= 1
+            if grant[jid] < j.requested:
+                d = j.steps_per_s(grant[jid] + 1) - j.steps_per_s(grant[jid])
+                heapq.heappush(heap, (-d, j.submit_time, jid))
+        actions: List[Action] = []
+        for j in running:
+            g = grant.get(j.id, j.chips)
+            if g == 0:
+                actions.append(Preempt(j.id, reason="goodput-rebalance"))
+            elif g != j.chips:
+                actions.append(Resize(j.id, g))
+        for j in pending:
+            if grant.get(j.id, 0) > 0:
+                actions.append(Start(j.id, grant[j.id]))
+        return actions
+
+
+POLICIES = {p.name: p for p in
+            (FIFO, EASYBackfill, FairShare, PriorityPreempt, GoodputElastic)}
+
+
+def make_policy(name: str, **kw) -> Policy:
+    return POLICIES[name](**kw)

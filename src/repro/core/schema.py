@@ -1,0 +1,107 @@
+"""Task Schema Layer (TACC §3.1, layer 1).
+
+Every task submitted to the cluster is a self-contained, unified
+:class:`TaskSpec`: compute/network/QoS requirements, application payload
+(code, dependencies, dataset references), and runtime/provisioning
+configuration. The canonical JSON serialization is hashed, which gives the
+paper's reproducibility guarantee: the same spec hash executes identically on
+any TACC instance (deterministic data stream + seeded init + recorded plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+QOS_CLASSES = ("realtime", "batch", "besteffort")
+BACKENDS = ("jax_train", "jax_serve", "shell")
+
+
+class SpecError(ValueError):
+    pass
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """Computing / network resource and QoS requirements."""
+    chips: int = 1
+    min_chips: int = 0              # >0 => elastic: may run shrunk
+    prefer_single_pod: bool = True  # gang placement hint (ICI locality)
+    hbm_gb_per_chip: float = 16.0
+    qos: str = "batch"
+    priority: int = 0               # higher preempts lower (if preemptible)
+    preemptible: bool = True
+    max_runtime_s: float = 86400.0
+
+    def validate(self) -> None:
+        if self.chips < 1:
+            raise SpecError("chips must be >= 1")
+        if self.min_chips > self.chips:
+            raise SpecError("min_chips > chips")
+        if self.qos not in QOS_CLASSES:
+            raise SpecError(f"qos must be one of {QOS_CLASSES}")
+
+
+@dataclass(frozen=True)
+class RuntimeEnv:
+    """Runtime environment / provisioning configuration."""
+    backend: str = "jax_train"
+    env_vars: Dict[str, str] = field(default_factory=dict)
+    mesh_hint: Optional[str] = None      # e.g. "data*model"
+    checkpoint_interval_steps: int = 50
+
+    def validate(self) -> None:
+        if self.backend not in BACKENDS:
+            raise SpecError(f"backend must be one of {BACKENDS}")
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """The self-contained task description (layer-1 schema)."""
+    name: str
+    user: str = "anonymous"
+    tenant: str = "default"
+    resources: ResourceSpec = field(default_factory=ResourceSpec)
+    runtime: RuntimeEnv = field(default_factory=RuntimeEnv)
+    # backend-specific payload: for jax_train e.g.
+    #   {arch, smoke, steps, global_batch, seq_len, lr, seed}
+    entry: Dict[str, Any] = field(default_factory=dict)
+    # application artifacts: name -> inline content (str) or "cas:<digest>"
+    artifacts: Dict[str, str] = field(default_factory=dict)
+    # scheduling hints
+    estimated_duration_s: float = 600.0
+    total_steps: int = 100
+    max_retries: int = 3
+
+    def validate(self) -> None:
+        if not self.name:
+            raise SpecError("task needs a name")
+        self.resources.validate()
+        self.runtime.validate()
+        if self.runtime.backend == "jax_train" and "arch" not in self.entry:
+            raise SpecError("jax_train tasks need entry.arch")
+        if self.total_steps < 1:
+            raise SpecError("total_steps must be >= 1")
+
+    # -- canonical serialization / reproducibility hash ---------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def canonical_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def spec_hash(self) -> str:
+        return hashlib.sha256(self.canonical_json().encode()).hexdigest()[:16]
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "TaskSpec":
+        d = dict(d)
+        if "resources" in d and isinstance(d["resources"], dict):
+            d["resources"] = ResourceSpec(**d["resources"])
+        if "runtime" in d and isinstance(d["runtime"], dict):
+            d["runtime"] = RuntimeEnv(**d["runtime"])
+        return TaskSpec(**d)

@@ -1,0 +1,238 @@
+"""Discrete-event cluster simulator.
+
+Drives a :class:`Policy` against the :class:`Cluster` model with the
+operational behaviors of the Execution Layer: checkpoint-then-preempt,
+node-failure restart from the last checkpoint, straggler detection +
+drain/reallocate, elastic resizes. Used by the scheduler benchmarks (the
+paper's shared-cluster-efficiency claims) and by the property tests.
+
+Virtual time; nothing here touches JAX.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.cluster import Cluster
+from repro.core.compiler import ExecutionPlan
+from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
+                                  Start)
+
+
+@dataclass
+class SimConfig:
+    tick: float = 1.0
+    checkpoint_interval_s: float = 30.0
+    checkpoint_cost_s: float = 2.0        # pause while snapshotting
+    restart_cost_s: float = 10.0          # provisioning + restore
+    straggler_mitigation: bool = True
+    straggler_threshold: float = 0.75
+    seed: int = 0
+    max_time: float = 200000.0
+
+
+@dataclass
+class SimEvent:
+    time: float
+    kind: str                      # fail_node | recover_node | set_speed
+    node: str
+    value: float = 0.0
+
+
+class ClusterSim:
+    def __init__(self, cluster: Cluster, policy: Policy,
+                 cfg: SimConfig = SimConfig()):
+        self.cluster = cluster
+        self.policy = policy
+        self.cfg = cfg
+        self.now = 0.0
+        self.jobs: Dict[str, Job] = {}
+        self.pending_events: List[SimEvent] = []
+        self.trace: List[Tuple[float, str, str]] = []
+        self._arrivals: List[Tuple[float, Job]] = []
+        self._pause_until: Dict[str, float] = {}
+        self._last_ckpt: Dict[str, float] = {}
+
+    # -- workload ------------------------------------------------------------
+
+    def submit(self, job: Job, at: Optional[float] = None) -> None:
+        t = job.submit_time if at is None else at
+        job.submit_time = t
+        self._arrivals.append((t, job))
+        self._arrivals.sort(key=lambda x: x[0])
+
+    def inject(self, event: SimEvent) -> None:
+        self.pending_events.append(event)
+        self.pending_events.sort(key=lambda e: e.time)
+
+    # -- helpers -------------------------------------------------------------
+
+    def _running(self) -> List[Job]:
+        return [j for j in self.jobs.values() if j.state == JobState.RUNNING]
+
+    def _pending(self) -> List[Job]:
+        return [j for j in self.jobs.values() if j.state == JobState.PENDING]
+
+    def _log(self, job: Job, msg: str) -> None:
+        job.log(self.now, msg)
+        self.trace.append((self.now, job.id, msg))
+
+    def _start(self, job: Job, chips: int) -> None:
+        alloc = self.cluster.try_allocate(
+            job.id, chips, job.spec.resources.prefer_single_pod)
+        if alloc is None:
+            return
+        job.state = JobState.RUNNING
+        job.chips = chips
+        job.start_time = self.now
+        if job.first_start is None:
+            job.first_start = self.now
+        self._pause_until[job.id] = self.now + (
+            self.cfg.restart_cost_s if job.restarts or job.preemptions else 0.0)
+        self._last_ckpt[job.id] = self.now
+        self._log(job, f"start chips={chips} pods={self.cluster.job_pods(job.id)}")
+
+    def _stop(self, job: Job, state: JobState, *, checkpoint: bool,
+              reason: str = "") -> None:
+        if checkpoint:
+            job.ckpt_progress = job.progress
+        else:
+            job.progress = job.ckpt_progress           # lose uncheckpointed work
+        self.cluster.release(job.id)
+        job.chips = 0
+        job.state = state
+        self._log(job, f"stop -> {state.value} {reason}")
+
+    def _apply(self, actions) -> None:
+        for a in actions:
+            if isinstance(a, Start):
+                job = self.jobs[a.job_id]
+                if job.state == JobState.PENDING:
+                    self._start(job, a.chips)
+            elif isinstance(a, Preempt):
+                job = self.jobs[a.job_id]
+                if job.state == JobState.RUNNING:
+                    job.preemptions += 1
+                    self._stop(job, JobState.PENDING, checkpoint=True,
+                               reason=f"preempt({a.reason})")
+            elif isinstance(a, Resize):
+                job = self.jobs[a.job_id]
+                if job.state == JobState.RUNNING and a.chips != job.chips:
+                    # checkpoint-resize-resume
+                    job.ckpt_progress = job.progress
+                    self.cluster.release(job.id)
+                    alloc = self.cluster.try_allocate(
+                        job.id, a.chips, job.spec.resources.prefer_single_pod)
+                    if alloc is None:   # rollback
+                        alloc = self.cluster.try_allocate(
+                            job.id, job.chips,
+                            job.spec.resources.prefer_single_pod)
+                        if alloc is None:
+                            job.state = JobState.PENDING
+                            job.chips = 0
+                        continue
+                    self._log(job, f"resize {job.chips} -> {a.chips}")
+                    job.chips = a.chips
+                    self._pause_until[job.id] = self.now + self.cfg.restart_cost_s
+
+    # -- main loop -----------------------------------------------------------
+
+    def step(self) -> None:
+        dt = self.cfg.tick
+        # arrivals
+        while self._arrivals and self._arrivals[0][0] <= self.now:
+            _, job = self._arrivals.pop(0)
+            self.jobs[job.id] = job
+            self._log(job, "submitted")
+        # injected events
+        while self.pending_events and self.pending_events[0].time <= self.now:
+            ev = self.pending_events.pop(0)
+            if ev.kind == "fail_node":
+                victims = self.cluster.fail_node(ev.node)
+                for jid in victims:
+                    job = self.jobs[jid]
+                    job.restarts += 1
+                    self._stop(job, JobState.PENDING, checkpoint=False,
+                               reason=f"node-failure({ev.node})")
+            elif ev.kind == "recover_node":
+                self.cluster.recover_node(ev.node)
+            elif ev.kind == "set_speed":
+                self.cluster.set_speed(ev.node, ev.value)
+                if ev.value >= 0.99:                  # recovered: undrain
+                    self.cluster.drain(ev.node, False)
+        # straggler mitigation: drain + checkpoint-restart without the node
+        if self.cfg.straggler_mitigation:
+            for job in self._running():
+                slow = self.cluster.straggler_nodes(
+                    job.id, self.cfg.straggler_threshold)
+                if slow:
+                    for nid in slow:
+                        self.cluster.drain(nid)
+                    job.restarts += 1
+                    self._stop(job, JobState.PENDING, checkpoint=True,
+                               reason=f"straggler-drain({','.join(slow)})")
+        # progress
+        for job in self._running():
+            if self.now < self._pause_until.get(job.id, 0.0):
+                continue
+            if self.now - self._last_ckpt.get(job.id, 0.0) >= \
+                    self.cfg.checkpoint_interval_s:
+                job.ckpt_progress = job.progress
+                self._last_ckpt[job.id] = self.now
+                self._pause_until[job.id] = self.now + self.cfg.checkpoint_cost_s
+                continue
+            sps = job.steps_per_s(job.chips,
+                                  self.cluster.crosses_pods(job.id))
+            job.progress += dt * sps * self.cluster.job_speed(job.id)
+            if job.progress >= job.total_steps:
+                job.progress = job.total_steps
+                job.end_time = self.now
+                self._stop(job, JobState.COMPLETED, checkpoint=True)
+        # scheduling
+        self.policy.account(dt, self._running())
+        actions = self.policy.schedule(self.now, self._pending(),
+                                       self._running(), self.cluster)
+        self._apply(actions)
+        self.now += dt
+
+    def run(self, until: Optional[float] = None) -> Dict[str, float]:
+        until = until if until is not None else self.cfg.max_time
+        while self.now < until:
+            self.step()
+            if self._all_done() and not self.pending_events:
+                break
+        return self.metrics()
+
+    def _all_done(self) -> bool:
+        if self._arrivals:
+            return False
+        js = self.jobs.values()
+        return bool(js) and all(
+            j.state in (JobState.COMPLETED, JobState.FAILED, JobState.KILLED)
+            for j in js)
+
+    # -- metrics ---------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, float]:
+        done = [j for j in self.jobs.values() if j.state == JobState.COMPLETED]
+        waits = [(j.first_start - j.submit_time) for j in done
+                 if j.first_start is not None]
+        jcts = [(j.end_time - j.submit_time) for j in done if j.end_time]
+        makespan = max((j.end_time for j in done if j.end_time), default=0.0)
+        total_chip_s = sum(j.total_steps * j.spec.entry.get("work_per_step", 1.0)
+                           for j in done)
+        return {
+            "completed": len(done),
+            "jobs": len(self.jobs),
+            "makespan": makespan,
+            "avg_wait": sum(waits) / len(waits) if waits else 0.0,
+            "avg_jct": sum(jcts) / len(jcts) if jcts else 0.0,
+            "p95_jct": sorted(jcts)[int(0.95 * (len(jcts) - 1))] if jcts else 0.0,
+            "preemptions": sum(j.preemptions for j in self.jobs.values()),
+            "restarts": sum(j.restarts for j in self.jobs.values()),
+            "useful_chip_seconds": total_chip_s,
+            "cluster_chip_seconds": self.cluster.total_chips * max(self.now, 1e-9),
+            "utilization_proxy": total_chip_s
+            / (self.cluster.total_chips * max(makespan, 1e-9)),
+        }

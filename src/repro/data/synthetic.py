@@ -1,0 +1,105 @@
+"""Deterministic synthetic LM data pipeline.
+
+Sequences follow a noisy affine-modular walk (x_{t+1} = (a*x_t + b) mod V with
+occasional uniform noise), which is genuinely learnable — a ~100M model drives
+loss well below the unigram entropy within a few hundred steps (see
+examples/train_cluster.py). Batches are a pure function of (seed, step), so a
+restarted job resumes the exact stream (reproducible execution, one of the
+paper's schema-layer guarantees), and per-host sharding is a disjoint
+row-slice of the global batch.
+
+Modality stubs per the assignment: VLM batches carry precomputed patch
+embeddings; audio batches carry precomputed frame embeddings (derived from the
+token stream through a fixed random projection, so the mapping is learnable).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.train.loss import IGNORE
+
+
+class SyntheticLM:
+    def __init__(self, cfg: ModelConfig, global_batch: int, seq_len: int,
+                 seed: int = 0, noise: float = 0.05,
+                 host_id: int = 0, n_hosts: int = 1):
+        assert global_batch % n_hosts == 0
+        self.cfg = cfg
+        self.global_batch = global_batch
+        self.local_batch = global_batch // n_hosts
+        self.row0 = host_id * self.local_batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.noise = noise
+        self.a, self.b = 5, 17
+        v = cfg.vocab_size
+        # fixed random frame-embedding table for the audio stub
+        if cfg.input_mode == "embeds":
+            rng = np.random.RandomState(seed ^ 0xA5A5)
+            self._frame_table = rng.randn(v, cfg.d_model).astype(np.float32) * 0.5
+
+    def _tokens(self, step: int) -> np.ndarray:
+        v = self.cfg.vocab_size
+        rng = np.random.RandomState((self.seed * 1_000_003 + step) % (2**31))
+        full = np.zeros((self.global_batch, self.seq_len + 1), np.int64)
+        full[:, 0] = rng.randint(0, v, self.global_batch)
+        noise_mask = rng.rand(self.global_batch, self.seq_len) < self.noise
+        noise_tok = rng.randint(0, v, (self.global_batch, self.seq_len))
+        for t in range(self.seq_len):
+            nxt = (self.a * full[:, t] + self.b) % v
+            full[:, t + 1] = np.where(noise_mask[:, t], noise_tok[:, t], nxt)
+        return full[self.row0:self.row0 + self.local_batch]
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        full = self._tokens(step)
+        tokens = full[:, :-1].astype(np.int32)
+        labels = full[:, 1:].astype(np.int32)
+        if cfg.input_mode == "embeds":
+            emb = self._frame_table[tokens]
+            return {"frame_embeds": emb.astype(np.float32),
+                    "labels": labels}
+        if cfg.input_mode == "tokens+vision":
+            vt = cfg.vision_tokens
+            rng = np.random.RandomState((self.seed ^ 0x5A5A) + step)
+            vis = rng.randn(self.local_batch, vt, cfg.d_model).astype(np.float32)
+            lab = np.concatenate(
+                [np.full((self.local_batch, vt), IGNORE, np.int32),
+                 labels[:, :self.seq_len - vt]], axis=1)
+            return {"tokens": tokens[:, :self.seq_len - vt],
+                    "vision_embeds": vis, "labels": lab}
+        return {"tokens": tokens, "labels": labels}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                opt_cfg=None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one dry-run cell.
+
+    train/prefill: full-sequence batches; decode: one new token per sequence
+    plus the (cache) state, which the dry-run builds separately.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        out: Dict[str, jax.ShapeDtypeStruct] = {}
+        if cfg.input_mode == "embeds":
+            out["frame_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f32)
+        elif cfg.input_mode == "tokens+vision":
+            vt = cfg.vision_tokens
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - vt), i32)
+            out["vision_embeds"] = jax.ShapeDtypeStruct((B, vt, cfg.d_model), f32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return out
+    # decode: one token per sequence
+    if cfg.input_mode == "embeds":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1, cfg.d_model), f32)}
+    return {"tokens": jax.ShapeDtypeStruct((B,), i32)}

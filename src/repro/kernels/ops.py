@@ -1,0 +1,63 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+``backend`` resolution: 'pallas' (real TPU), 'interpret' (CPU validation of
+the same kernel body), 'xla' (pure-jnp fallback / oracle). The model stack
+calls these through RunFlags.backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.rmsnorm import rmsnorm_tpu, rmsnorm_residual_tpu
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def _flash_bhsd(q, k, v, causal: bool, interpret: bool):
+    return flash_attention_tpu(q, k, v, causal=causal, interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    lengths: Optional[jax.Array] = None,
+                    interpret: bool = False) -> jax.Array:
+    """q,k,v: (B,S,H,D) (kv pre-repeated to H heads). Returns (B,S,H,D).
+
+    Ragged ``lengths`` masking falls back to the XLA online-softmax path
+    (the kernel handles the dense causal/full cases the dry-run shapes use).
+    """
+    if lengths is not None:
+        from repro.models.attention import flash_attention_xla
+        return flash_attention_xla(q, k, v, causal=causal, lengths=lengths)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = _flash_bhsd(qt, kt, vt, causal, interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+            backend: str = "interpret") -> jax.Array:
+    """x: (..., D). Fused RMSNorm."""
+    if backend == "xla":
+        return _ref.rmsnorm_ref(x, w, eps=eps)
+    shape = x.shape
+    y = rmsnorm_tpu(x.reshape(-1, shape[-1]), w, eps=eps,
+                    interpret=(backend == "interpret"))
+    return y.reshape(shape)
+
+
+def rmsnorm_residual(x: jax.Array, residual: jax.Array, w: jax.Array, *,
+                     eps: float = 1e-5, backend: str = "interpret"):
+    if backend == "xla":
+        return _ref.rmsnorm_residual_ref(x, residual, w, eps=eps)
+    shape = x.shape
+    y, s = rmsnorm_residual_tpu(x.reshape(-1, shape[-1]),
+                                residual.reshape(-1, shape[-1]), w, eps=eps,
+                                interpret=(backend == "interpret"))
+    return y.reshape(shape), s.reshape(shape)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """Naive full-softmax attention. q,k,v: (B,H,S,D)."""
+    B, H, S, D = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x: jax.Array, residual: jax.Array, w: jax.Array, *,
+                         eps: float = 1e-5):
+    s = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return rmsnorm_ref(s, w, eps=eps), s

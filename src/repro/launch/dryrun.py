@@ -1,0 +1,456 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). REPRO_DRYRUN_DEVICES overrides for CI tiny meshes.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: ``lower().compile()`` every (architecture x input-shape
+x mesh) cell, record memory analysis, cost analysis and the collective
+schedule. No arrays are ever allocated (ShapeDtypeStruct + eval_shape only).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+      --shape train_4k --mesh multi --variants
+
+``--variants`` additionally lowers reduced (microbatch x layer) variants used
+by the roofline extrapolation (lax.scan bodies are counted once by
+cost_analysis; benchmarks/roofline.py solves f(M,L)=A+M*(B+L*C) from these).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.data.synthetic import input_specs
+from repro.launch.mesh import make_production_mesh, make_tiny_mesh
+from repro.models import (DEFAULT_RULES, POD_FSDP_RULES, abstract_params,
+                          model_defs, param_count, param_shardings)
+from repro.models.transformer import RunFlags, decode_step, init_cache, prefill
+from repro.parallel.sharding import (cache_specs, decode_plan, to_shardings,
+                                     train_batch_axes)
+from repro.train import OptConfig, TrainConfig, build_train_step
+from repro.train.step import abstract_train_state, batch_shardings
+
+BIG_PARAMS = 50e9      # above this: bf16 optimizer moments + pod-FSDP rules
+
+
+# ---------------------------------------------------------------------------
+# Collective parsing from post-SPMD HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# result type may be a tuple "(f32[..], f32[..])" (e.g. shard_map all-to-all),
+# so capture everything between "=" and the opcode; "-done" ops carry no
+# shapes and are intentionally not matched (starts are counted once).
+_COLL_RE = re.compile(
+    r" = (\(?[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+                       r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+
+def _tensor_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _crosses_pod(line: str, pod_stride: int, n_dev: int) -> Optional[bool]:
+    m = re.search(r"replica_groups=\{\{([^}]*(?:\},\{[^}]*)*)\}\}", line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.split(",") if x.strip()]
+            if ids and (max(ids) // pod_stride) != (min(ids) // pod_stride):
+                return True
+        return False
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?",
+                  line)
+    if m:
+        g, n = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        import numpy as np
+        ids = np.arange(int(np.prod(dims)))
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.reshape(dims).transpose(perm).reshape(-1)
+        ids = ids.reshape(g, n)
+        return bool(((ids // pod_stride).max(1) != (ids // pod_stride).min(1)
+                     ).any())
+    return None
+
+
+def parse_collectives(hlo: str, n_dev: int, pod_stride: int = 256) -> Dict:
+    """Sum operand bytes per collective type; flag pod-crossing groups.
+    NOTE: ops inside while/scan bodies appear once — the roofline extrapolation
+    corrects for trip counts."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"bytes": 0, "count": 0, "interpod_bytes": 0})
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        b = _tensor_bytes(m.group(1))      # result-type bytes (per device)
+        out[kind]["bytes"] += b
+        out[kind]["count"] += 1
+        crosses = _crosses_pod(line, pod_stride, n_dev)
+        if crosses:
+            out[kind]["interpod_bytes"] += b
+    return {k: dict(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Per-cell plans
+# ---------------------------------------------------------------------------
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig, mesh,
+              profile: str = "baseline") -> Dict:
+    """Per-cell execution plan.
+
+    ``baseline`` is the paper-faithful starting point; ``optimized`` applies
+    the §Perf hillclimb results: bf16 gradient accumulation, fewer
+    microbatches for MoE archs (FSDP re-gathers scale with M), contiguous
+    all-gather MoE combine, and no sequence-parallel constraint on prefill
+    (it triggered 490+ resharding collective-permutes). See EXPERIMENTS.md.
+    """
+    n_params = param_count(model_defs(cfg))
+    big = n_params > BIG_PARAMS
+    multi = "pod" in mesh.axis_names
+    opt = profile == "optimized"
+    n_micro = 8
+    if opt and big:
+        n_micro = 2       # ZeRO-3 weight re-gathers scale with M (x4 less)
+    plan = {
+        "profile": profile,
+        "n_params": int(n_params),
+        "opt_moment_dtype": "bfloat16" if big else "float32",
+        "rules": "pod_fsdp" if (big and multi) else "default",
+        "n_microbatches": n_micro if shape.kind == "train" else 1,
+        "seq_parallel_carry": shape.kind == "train" or
+        (shape.kind == "prefill" and not opt),
+        "accum_dtype": "bfloat16" if (opt and big) else "float32",
+        "moe_combine": "allgather" if opt else "psum",
+        "cast_params_early": opt,
+    }
+    if shape.kind == "decode":
+        b_axes, s_axes = decode_plan(cfg, shape, mesh)
+        plan["decode_batch_axes"] = list(b_axes)
+        plan["decode_seq_axes"] = list(s_axes)
+    return plan
+
+
+def _opt_cfg(plan) -> OptConfig:
+    dt = jnp.bfloat16 if plan["opt_moment_dtype"] == "bfloat16" else jnp.float32
+    return OptConfig(m_dtype=dt, v_dtype=dt)
+
+
+def _rules(plan):
+    return POD_FSDP_RULES if plan["rules"] == "pod_fsdp" else DEFAULT_RULES
+
+
+def _act_spec(mesh, plan):
+    if not plan.get("seq_parallel_carry"):
+        return None
+    b = train_batch_axes(mesh)
+    lead = b if len(b) > 1 else (b[0] if b else None)
+    return P(lead, "model", None)
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile one cell
+# ---------------------------------------------------------------------------
+
+def _with_layers(cfg: ModelConfig, n_periods: int) -> ModelConfig:
+    n_layers = len(cfg.prelayers) + len(cfg.period) * n_periods
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
+                n_micro: int, global_batch: int, unroll: bool = False):
+    ocfg = _opt_cfg(plan)
+    accum = jnp.bfloat16 if plan.get("accum_dtype") == "bfloat16" \
+        else jnp.float32
+    tcfg = TrainConfig(n_microbatches=n_micro, unroll_accum=unroll,
+                       accum_dtype=accum)
+    b_axes = train_batch_axes(mesh)
+    flags = RunFlags(distributed=True, token_axes=b_axes,
+                     act_spec=_act_spec(mesh, plan), unroll_layers=unroll,
+                     moe_combine=plan.get("moe_combine", "psum"),
+                     cast_params_early=plan.get("cast_params_early", False))
+    step = build_train_step(cfg, ocfg, tcfg, flags)
+    state = abstract_train_state(cfg, ocfg)
+    rules = _rules(plan)
+    pshard = param_shardings(model_defs(cfg), mesh, rules)
+    scalar = NamedSharding(mesh, P())
+    state_sh = {"params": pshard,
+                "opt": {"m": pshard, "v": pshard, "step": scalar}}
+    sh = dataclasses.replace(shape, global_batch=global_batch)
+    batch = input_specs(cfg, sh)
+    bshard = batch_shardings(mesh, b_axes, batch)
+    jitted = jax.jit(step, in_shardings=(state_sh, bshard),
+                     out_shardings=(state_sh, None), donate_argnums=0)
+    with jax.set_mesh(mesh):
+        return jitted.lower(state, batch)
+
+
+def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
+                  global_batch: int, unroll: bool = False):
+    b_axes = train_batch_axes(mesh)
+    flags = RunFlags(distributed=True, token_axes=b_axes,
+                     act_spec=_act_spec(mesh, plan), remat="none",
+                     unroll_layers=unroll,
+                     moe_combine=plan.get("moe_combine", "psum"),
+                     cast_params_early=plan.get("cast_params_early", False))
+    rules = _rules(plan)
+    pshard = param_shardings(model_defs(cfg), mesh, rules)
+    params = abstract_params(model_defs(cfg))
+    sh = dataclasses.replace(shape, global_batch=global_batch)
+    batch = input_specs(cfg, sh)
+    bshard = batch_shardings(mesh, b_axes, batch)
+    lead = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    lengths = jax.ShapeDtypeStruct((sh.global_batch,), jnp.int32)
+    lshard = NamedSharding(mesh, P(lead))
+    # cache comes out in the decode layout (seq over model)
+    cspecs = cache_specs(cfg, b_axes, ("model",))
+    cshard = to_shardings(cspecs, mesh)
+
+    def fn(params, batch, lengths):
+        return prefill(cfg, params, batch, lengths, flags=flags)
+
+    jitted = jax.jit(fn, in_shardings=(pshard, bshard, lshard),
+                     out_shardings=(None, cshard))
+    with jax.set_mesh(mesh):
+        return jitted.lower(params, batch, lengths)
+
+
+def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
+                 global_batch: int, unroll: bool = False):
+    b_axes = tuple(plan["decode_batch_axes"])
+    s_axes = tuple(plan["decode_seq_axes"])
+    flags = RunFlags(distributed=True, token_axes=b_axes,
+                     decode_seq_axes=s_axes, remat="none",
+                     unroll_layers=unroll,
+                     moe_combine=plan.get("moe_combine", "psum"),
+                     cast_params_early=plan.get("cast_params_early", False))
+    rules = _rules(plan)
+    pshard = param_shardings(model_defs(cfg), mesh, rules)
+    params = abstract_params(model_defs(cfg))
+    sh = dataclasses.replace(shape, global_batch=global_batch)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, sh.global_batch, sh.seq_len))
+    cshard = to_shardings(cache_specs(cfg, b_axes, s_axes), mesh)
+    tok = input_specs(cfg, sh)["tokens"]
+    lead = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    tshard = NamedSharding(mesh, P(*([lead] + [None] * (len(tok.shape) - 1))))
+
+    def fn(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens, flags=flags)
+
+    jitted = jax.jit(fn, in_shardings=(pshard, cshard, tshard),
+                     out_shardings=(None, cshard), donate_argnums=1)
+    with jax.set_mesh(mesh):
+        return jitted.lower(params, cache, tok)
+
+
+def compile_and_report(lowered, mesh, label: str) -> Dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    rec: Dict = {"label": label, "compile_s": round(t_compile, 2),
+                 "flops": float(ca.get("flops", 0.0)),
+                 "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        }
+    except Exception as e:   # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    n_dev = mesh.devices.size
+    pod_stride = n_dev // mesh.axis_sizes[0] if "pod" in mesh.axis_names else n_dev
+    rec["collectives"] = parse_collectives(hlo, n_dev, pod_stride)
+    rec["hlo_chars"] = len(hlo)
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             variants: bool = False, skip_full: bool = False,
+             profile: str = "baseline") -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    result: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "time": time.time()}
+    if not shape_applicable(cfg, shape):
+        result["status"] = "skipped"
+        result["reason"] = ("long_500k needs sub-quadratic attention; "
+                            f"{arch} is a pure full-attention arch "
+                            "(see DESIGN.md §Arch-applicability)")
+        return result
+    if mesh_kind == "tiny":
+        mesh = make_tiny_mesh(multi_pod=True)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    plan = make_plan(cfg, shape, mesh, profile=profile)
+    result["plan"] = plan
+    result["mesh_shape"] = dict(zip(mesh.axis_names,
+                                    [int(s) for s in mesh.axis_sizes]))
+
+    def lower_one(c, n_micro, gb, unroll=False):
+        if shape.kind == "train":
+            return lower_train(c, shape, mesh, plan, n_micro, gb, unroll)
+        if shape.kind == "prefill":
+            return lower_prefill(c, shape, mesh, plan, gb, unroll)
+        return lower_decode(c, shape, mesh, plan, gb, unroll)
+
+    gb_full = shape.global_batch
+    try:
+        if not skip_full:
+            lowered = lower_one(cfg, plan["n_microbatches"], gb_full)
+            result["full"] = compile_and_report(lowered, mesh, "full")
+        result["status"] = "ok"
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        return result
+
+    # roofline variants: UNROLLED (python-loop) reduced configs so that
+    # cost_analysis counts every layer/microbatch instance
+    try:
+        # (m, l) in {(1,0),(1,1),(2,0)}: the l=0 lower (prelayers only) makes
+        # every variant cheap even for 8-layer periods (jamba)
+        if variants and shape.kind == "train":
+            micro_bs = gb_full // plan["n_microbatches"]
+            vs = {}
+            for (m, lp) in ((1, 0), (1, 1), (2, 0)):
+                c = _with_layers(cfg, lp)
+                lw = lower_one(c, m, micro_bs * m, unroll=True)
+                vs[f"m{m}_l{lp}"] = compile_and_report(lw, mesh, f"m{m}_l{lp}")
+            result["variants"] = vs
+            result["variant_model"] = {
+                "kind": "train", "micro_batch": micro_bs,
+                "m_full": plan["n_microbatches"], "l_full": cfg.n_periods}
+        elif variants:
+            vs = {}
+            for lp in (0, 1):
+                c = _with_layers(cfg, lp)
+                lw = lower_one(c, 1, gb_full, unroll=True)
+                vs[f"l{lp}"] = compile_and_report(lw, mesh, f"l{lp}")
+            result["variants"] = vs
+            result["variant_model"] = {"kind": shape.kind,
+                                       "l_full": cfg.n_periods}
+    except Exception as e:
+        result["variant_error"] = f"{type(e).__name__}: {e}"
+        result["variant_traceback"] = traceback.format_exc()[-3000:]
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "tiny", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variants", action="store_true",
+                    help="also lower roofline-extrapolation variants")
+    ap.add_argument("--variants-only", action="store_true",
+                    help="recompute only the variants and merge them into "
+                         "existing artifacts (full compile skipped)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    summary = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}__{shape_name}__{mesh_kind}"
+                t0 = time.time()
+                path = os.path.join(args.out, tag + ".json")
+                if args.variants_only:
+                    if not os.path.exists(path):
+                        continue
+                    with open(path) as f:
+                        rec = json.load(f)
+                    if rec.get("status") != "ok":
+                        continue
+                    upd = run_cell(arch, shape_name, mesh_kind,
+                                   variants=True, skip_full=True,
+                                   profile=args.profile)
+                    rec["variants"] = upd.get("variants")
+                    rec["variant_model"] = upd.get("variant_model")
+                    if upd.get("variant_error"):
+                        rec["variant_error"] = upd["variant_error"]
+                    rec["status"] = upd["status"] if upd["status"] != "ok" \
+                        else rec["status"]
+                    if upd.get("error"):
+                        rec["variant_error"] = upd["error"]
+                else:
+                    rec = run_cell(arch, shape_name, mesh_kind,
+                                   variants=args.variants
+                                   and mesh_kind == "single",
+                                   profile=args.profile)
+                rec["wall_s"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec["full"].get("memory", {})
+                    extra = (f"flops={rec['full']['flops']:.3e} "
+                             f"temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+                             f"args={mem.get('argument_bytes', 0)/2**30:.2f}GiB")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{rec['wall_s']:7.1f}s] {tag:55s} {status:8s} {extra}",
+                      flush=True)
+                summary.append({"cell": tag, "status": status,
+                                "wall_s": rec["wall_s"]})
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    n_ok = sum(1 for s in summary if s["status"] == "ok")
+    n_skip = sum(1 for s in summary if s["status"] == "skipped")
+    n_err = len(summary) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

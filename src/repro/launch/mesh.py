@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state — the dry-run must set XLA_FLAGS before any jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod: 16x16 = 256 chips; multi-pod: 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """8-device mesh for CPU integration tests (same axis names)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (smoke tests)."""
+    return _mk((1, 1), ("data", "model"))

@@ -1,0 +1,109 @@
+"""Fleet training driver.
+
+On a real TPU fleet each host runs this under its own process with
+``jax.distributed.initialize()``; on this harness it runs the same code on
+the local device (or a forced-device tiny mesh via REPRO_DRYRUN_DEVICES).
+XLA collective-overlap flags for v5e are applied unless already set.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tacc-100m --smoke \
+      --steps 100 --global-batch 8 --seq-len 64 --ckpt-dir /tmp/run1
+"""
+import os
+
+_XLA_PERF_FLAGS = (
+    "--xla_tpu_enable_data_parallel_all_reduce_opt=true "
+    "--xla_tpu_data_parallel_opt_different_sized_ops=true "
+    "--xla_tpu_enable_async_collective_fusion=true "
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+)
+if "TPU_NAME" in os.environ and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = _XLA_PERF_FLAGS
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt import Checkpointer, latest_step
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.models import model_defs, param_shardings
+from repro.models.transformer import RunFlags
+from repro.train import (OptConfig, TrainConfig, build_train_step,
+                         init_train_state)
+from repro.train.step import batch_shardings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tacc-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["local", "tiny", "pod", "multipod"],
+                    default="local")
+    args = ap.parse_args()
+
+    from repro.launch.mesh import (make_local_mesh, make_production_mesh,
+                                   make_tiny_mesh)
+    mesh = {"local": make_local_mesh, "tiny": make_tiny_mesh,
+            "pod": make_production_mesh,
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[
+        args.mesh]()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ocfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                     total_steps=args.steps)
+    tcfg = TrainConfig(n_microbatches=args.microbatches)
+    b_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    flags = RunFlags(distributed=True, token_axes=b_axes)
+    pshard = param_shardings(model_defs(cfg), mesh)
+    scalar = NamedSharding(mesh, P())
+    st_sh = {"params": pshard, "opt": {"m": pshard, "v": pshard,
+                                       "step": scalar}}
+    step_fn = jax.jit(build_train_step(cfg, ocfg, tcfg, flags),
+                      in_shardings=(st_sh, None), out_shardings=(st_sh, None),
+                      donate_argnums=0)
+    data = SyntheticLM(cfg, args.global_batch, args.seq_len, seed=args.seed,
+                       host_id=jax.process_index(),
+                       n_hosts=jax.process_count())
+    ck = Checkpointer(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+
+    with jax.set_mesh(mesh):
+        start = 0
+        if ck and latest_step(args.ckpt_dir) is not None:
+            state, man = ck.restore(shardings=st_sh)
+            start = man["step"]
+            print(f"restored step {start}")
+        else:
+            state = init_train_state(cfg, ocfg, jax.random.PRNGKey(args.seed))
+            state = jax.device_put(state, st_sh)
+        t0 = time.time()
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            state, m = step_fn(state, batch)
+            if (i + 1) % 10 == 0 or i + 1 == args.steps:
+                dt = time.time() - t0
+                tok = 10 * args.global_batch * args.seq_len
+                print(f"step {int(m['step']):5d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f} "
+                      f"lr {float(m['lr']):.2e} tok/s {tok/max(dt,1e-9):,.0f}")
+                t0 = time.time()
+            if ck and (i + 1) % args.ckpt_every == 0:
+                ck.save(i + 1, state)
+        if ck:
+            ck.save(args.steps, state, block=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pure-JAX model zoo for the TACC execution layer."""
+from repro.models.transformer import (RunFlags, model_defs, forward,
+                                      train_logits, prefill, decode_step,
+                                      init_cache)
+from repro.models.params import (ParamDef, init_params, abstract_params,
+                                 param_specs, param_shardings, param_count,
+                                 param_bytes, DEFAULT_RULES, POD_FSDP_RULES)

@@ -1,0 +1,158 @@
+"""Mamba (S6) selective state-space mixer, used by the Jamba hybrid.
+
+Training/prefill runs the recurrence as a *chunked associative scan*: the
+sequence is split into a small number of chunks (unrolled Python loop, so the
+FLOPs are visible to ``cost_analysis``); within a chunk the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` is evaluated with ``lax.associative_scan``
+(log-depth, fully parallel on the VPU); the carry ``h`` threads chunks
+sequentially. Decode is a single recurrent step over cached (conv, ssm) state.
+
+The recurrence runs in float32; projections in the model compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    return d_inner, m.d_state, m.d_conv, m.resolved_dt_rank(cfg.d_model)
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    di, ds, dc, dtr = _dims(cfg)
+    return {
+        "w_in": ParamDef((D, 2 * di), ("embed", "dinner")),
+        "conv_w": ParamDef((di, dc), ("dinner", "conv"), scale=1.0),
+        "conv_b": ParamDef((di,), ("dinner",), init="zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * ds), ("dinner", None)),
+        "dt_w": ParamDef((dtr, di), ("lora", "dinner")),
+        "dt_b": ParamDef((di,), ("dinner",), init="ones", scale=1.0),
+        "a_log": ParamDef((di, ds), ("dinner", "state"), init="ssm_a"),
+        "d_skip": ParamDef((di,), ("dinner",), init="ones"),
+        "w_out": ParamDef((di, D), ("dinner", "embed")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B,S,di); w: (di,dc)."""
+    dc = w.shape[1]
+    pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = b.astype(u.dtype)
+    acc = jnp.zeros_like(u) + out
+    S = u.shape[1]
+    for j in range(dc):
+        acc = acc + pad[:, j:j + S, :] * w[:, j].astype(u.dtype)
+    return acc
+
+
+def _ssm_inputs(cfg: ModelConfig, p: Dict, uc: jax.Array):
+    """uc: (B,S,di) post-conv activations -> (dA, dBu, C) in float32."""
+    di, ds, dc, dtr = _dims(cfg)
+    dt_bc = uc @ p["x_proj"].astype(uc.dtype)
+    dt_r, Bm, Cm = jnp.split(dt_bc.astype(jnp.float32), [dtr, dtr + ds], -1)
+    dt = jax.nn.softplus(dt_r @ p["dt_w"].astype(jnp.float32)
+                         + p["dt_b"].astype(jnp.float32))       # (B,S,di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                # (di,ds)
+    dA = jnp.exp(dt[..., None] * A)                             # (B,S,di,ds)
+    dBu = (dt * uc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    return dA, dBu, Cm
+
+
+def _assoc(elems_a, elems_b):
+    a1, b1 = elems_a
+    a2, b2 = elems_b
+    return a2 * a1, a2 * b1 + b2
+
+
+def mamba_mixer(cfg: ModelConfig, p: Dict, x: jax.Array, *,
+                n_chunks: int = 8) -> jax.Array:
+    """Full-sequence (train/prefill) forward. x: (B,S,D)."""
+    di, ds, dc, dtr = _dims(cfg)
+    B, S, D = x.shape
+    dt = x.dtype
+    uz = x @ p["w_in"].astype(dt)
+    u, z = jnp.split(uz, 2, -1)
+    uc = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    c = S // n_chunks
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    ys = []
+    for i in range(n_chunks):
+        ucc = jax.lax.slice_in_dim(uc, i * c, (i + 1) * c, axis=1)
+        dA, dBu, Cm = _ssm_inputs(cfg, p, ucc)
+        cumA, h = jax.lax.associative_scan(_assoc, (dA, dBu), axis=1)
+        h = h + cumA * h0[:, None]
+        h0 = h[:, -1]
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+        ys.append(y.astype(dt))
+    y = jnp.concatenate(ys, axis=1) if len(ys) > 1 else ys[0]
+    y = y + uc * p["d_skip"].astype(dt)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dt)
+
+
+def gather_window(u: jax.Array, lengths: jax.Array, w: int) -> jax.Array:
+    """Last ``w`` valid rows per sequence: u[b, lengths[b]-w : lengths[b]],
+    zero-padded on the left for short prompts. u: (B,S,di) -> (B,w,di)."""
+    B, S, di = u.shape
+    idx = lengths[:, None] - w + jnp.arange(w)[None, :]
+    valid = idx >= 0
+    g = jnp.take_along_axis(u, jnp.clip(idx, 0, S - 1)[:, :, None], axis=1)
+    return jnp.where(valid[:, :, None], g, 0)
+
+
+def mamba_prefill_cache(cfg: ModelConfig, p: Dict, x: jax.Array,
+                        lengths: jax.Array) -> Dict:
+    """Final (conv, ssm) state after consuming ``lengths`` tokens of x.
+    Positions beyond a row's length get identity transitions (a=1, b=0)."""
+    di, ds, dc, dtr = _dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    uz = x @ p["w_in"].astype(dt)
+    u, _ = jnp.split(uz, 2, -1)
+    uc = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    dA, dBu, _ = _ssm_inputs(cfg, p, uc)
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])[..., None, None]
+    dA = jnp.where(valid, dA, 1.0)
+    dBu = jnp.where(valid, dBu, 0.0)
+    _, h = jax.lax.associative_scan(_assoc, (dA, dBu), axis=1)
+    return {"conv": gather_window(u, lengths, dc - 1).astype(jnp.bfloat16),
+            "ssm": h[:, -1]}
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int):
+    di, ds, dc, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, dc - 1, di), jnp.bfloat16),
+            "ssm": jnp.zeros((batch, di, ds), jnp.float32)}
+
+
+def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (B,1,D); cache: {conv (B,dc-1,di), ssm (B,di,ds)}."""
+    di, ds, dc, dtr = _dims(cfg)
+    dt = x.dtype
+    uz = x[:, 0] @ p["w_in"].astype(dt)
+    u, z = jnp.split(uz, 2, -1)                                  # (B,di)
+    conv = cache["conv"].astype(dt)                              # (B,dc-1,di)
+    window = jnp.concatenate([conv, u[:, None]], axis=1)         # (B,dc,di)
+    uc = jnp.einsum("bcd,dc->bd", window, p["conv_w"].astype(dt)) \
+        + p["conv_b"].astype(dt)
+    uc = jax.nn.silu(uc)
+    dA, dBu, Cm = _ssm_inputs(cfg, p, uc[:, None])
+    h = dA[:, 0] * cache["ssm"] + dBu[:, 0]                      # (B,di,ds)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]).astype(dt)
+    y = y + uc * p["d_skip"].astype(dt)
+    y = y * jax.nn.silu(z)
+    y = (y @ p["w_out"].astype(dt))[:, None]
+    return y, {"conv": window[:, 1:].astype(jnp.bfloat16), "ssm": h}

@@ -1,0 +1,406 @@
+"""Model assembly: layer dispatch, scan-over-layers stack, train/prefill/decode.
+
+A model is ``prelayers`` (unscanned, e.g. DeepSeek-V2's dense layer 0) plus
+``n_periods`` repetitions of a ``period`` (tuple of LayerSpec). Period
+parameters are stacked on a leading axis and the stack is evaluated with
+``lax.scan``, keeping HLO size independent of depth (126-layer models compile
+in seconds at 512 devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.params import ParamDef
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import mamba as MB
+from repro.models import xlstm as XL
+
+
+@dataclass(frozen=True)
+class RunFlags:
+    """Runtime execution options (distribution / kernel backend / remat)."""
+    distributed: bool = False
+    backend: str = "xla"                   # attention backend: xla|pallas|interpret
+    ep_axis: str = "model"
+    token_axes: Tuple[str, ...] = ("data",)
+    decode_seq_axes: Tuple[str, ...] = ()  # () -> single-shard reference path
+    act_spec: Optional[Any] = None         # PartitionSpec for (B,S,D) activations
+    remat: str = "full"                    # full | none
+    mamba_chunks: int = 8
+    mla_absorbed: bool = True
+    # unroll the layer stack instead of lax.scan: used by the dry-run's
+    # roofline variants so cost_analysis counts every layer (scan bodies are
+    # counted once regardless of trip count)
+    unroll_layers: bool = False
+    moe_combine: str = "psum"              # psum | allgather (§Perf)
+    # cast weight matrices to the compute dtype BEFORE their use-site, so the
+    # ZeRO-3 all-gather moves bf16 instead of fp32 (halves FSDP gather volume;
+    # §Perf). Norm scales / biases / SSM A-matrices stay fp32.
+    cast_params_early: bool = False
+
+
+AUX_KEYS = ("moe_load_balance", "moe_router_z")
+
+
+def zero_aux() -> Dict[str, jax.Array]:
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def _add_aux(a: Dict, b: Dict) -> Dict:
+    return {k: a[k] + b.get(k, 0.0) for k in AUX_KEYS}
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+_MIXER_DEFS = {
+    "attn": A.attn_defs,
+    "mla": MLA.mla_defs,
+    "mamba": MB.mamba_defs,
+    "mlstm": XL.mlstm_defs,
+    "slstm": XL.slstm_defs,
+}
+
+
+def layer_defs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    out: Dict[str, Any] = {
+        "mixer_norm": L.norm_defs(cfg, cfg.d_model),
+        "mixer": _MIXER_DEFS[spec.mixer](cfg),
+    }
+    if spec.ffn != "none":
+        if not spec.parallel:
+            out["ffn_norm"] = L.norm_defs(cfg, cfg.d_model)
+        out["ffn"] = MOE.moe_defs(cfg) if spec.ffn == "moe" else L.ffn_defs(cfg)
+    return out
+
+
+def _stack_def(d: ParamDef, n: int) -> ParamDef:
+    return dataclasses.replace(d, shape=(n,) + d.shape, axes=("layers",) + d.axes)
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": L.embed_defs(cfg),
+        "out_norm": L.norm_defs(cfg, cfg.d_model),
+        "prelayers": tuple(layer_defs(cfg, s) for s in cfg.prelayers),
+    }
+    period = tuple(layer_defs(cfg, s) for s in cfg.period)
+    defs["period"] = jax.tree.map(lambda d: _stack_def(d, cfg.n_periods), period,
+                                  is_leaf=lambda x: isinstance(x, ParamDef))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+def layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, s_max: int):
+    if spec.mixer == "attn":
+        KV, HD = cfg.n_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, s_max, KV, HD), jnp.bfloat16),
+                "v": jnp.zeros((batch, s_max, KV, HD), jnp.bfloat16)}
+    if spec.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, s_max, m.kv_lora_rank), jnp.bfloat16),
+                "kr": jnp.zeros((batch, s_max, m.qk_rope_head_dim), jnp.bfloat16)}
+    if spec.mixer == "mamba":
+        return MB.mamba_init_cache(cfg, batch)
+    if spec.mixer == "mlstm":
+        return XL.mlstm_init_cache(cfg, batch)
+    if spec.mixer == "slstm":
+        return XL.slstm_init_cache(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    pre = tuple(layer_cache(cfg, s, batch, s_max) for s in cfg.prelayers)
+    def stack(c):
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_periods,) + a.shape, a.dtype), c)
+    period = tuple(stack(layer_cache(cfg, s, batch, s_max)) for s in cfg.period)
+    return {"prelayers": pre, "period": period, "lengths":
+            jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer_seq(cfg, spec, p, x, positions, lengths, flags, want_cache):
+    """Full-sequence mixer (train / prefill). Returns (y, cache_or_None)."""
+    if spec.mixer == "attn":
+        y, (k, v) = A.self_attention(cfg, p, x, positions, lengths=lengths,
+                                     backend=flags.backend,
+                                     unroll=flags.unroll_layers)
+        cache = {"k": k.astype(jnp.bfloat16),
+                 "v": v.astype(jnp.bfloat16)} if want_cache else None
+        return y, cache
+    if spec.mixer == "mla":
+        y, (ckv, kr) = MLA.mla_self_attention(cfg, p, x, positions,
+                                              lengths=lengths,
+                                              backend=flags.backend,
+                                              unroll=flags.unroll_layers)
+        cache = {"ckv": ckv.astype(jnp.bfloat16),
+                 "kr": kr.astype(jnp.bfloat16)} if want_cache else None
+        return y, cache
+    if spec.mixer == "mamba":
+        y = MB.mamba_mixer(cfg, p, x, n_chunks=flags.mamba_chunks)
+        cache = None
+        if want_cache:
+            lens = lengths if lengths is not None else \
+                jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+            cache = MB.mamba_prefill_cache(cfg, p, x, lens)
+        return y, cache
+    if spec.mixer in ("mlstm", "slstm"):
+        mix = XL.mlstm_mixer if spec.mixer == "mlstm" else XL.slstm_mixer
+        y = mix(cfg, p, x)
+        cache = None
+        if want_cache:
+            lens = lengths if lengths is not None else \
+                jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+            cache = XL.xlstm_prefill_cache(cfg, spec.mixer, p, x, lens)
+        return y, cache
+    raise ValueError(spec.mixer)
+
+
+def apply_layer_seq(cfg: ModelConfig, spec: LayerSpec, p: Dict, x: jax.Array,
+                    positions, lengths, flags: RunFlags, want_cache: bool):
+    """One full layer over a whole sequence. Returns (x, cache, aux)."""
+    aux = zero_aux()
+    h = L.apply_norm(cfg, p["mixer_norm"], x)
+    y_mix, cache = _apply_mixer_seq(cfg, spec, p["mixer"], h, positions,
+                                    lengths, flags, want_cache)
+    if spec.parallel and spec.ffn != "none":
+        y_ffn, aux = _apply_ffn(cfg, spec, p["ffn"], h, flags)
+        x = x + y_mix + y_ffn
+        return x, cache, aux
+    x = x + y_mix
+    if spec.ffn != "none":
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        y_ffn, aux = _apply_ffn(cfg, spec, p["ffn"], h, flags)
+        x = x + y_ffn
+    return x, cache, aux
+
+
+def _apply_ffn(cfg, spec, p, h, flags):
+    if spec.ffn == "moe":
+        y, aux_losses = MOE.moe_apply(cfg, p, h, distributed=flags.distributed,
+                                      ep_axis=flags.ep_axis,
+                                      token_axes=flags.token_axes,
+                                      combine=flags.moe_combine)
+        aux = zero_aux()
+        aux.update({k: jnp.asarray(v, jnp.float32)
+                    for k, v in aux_losses.items()})
+        return y, aux
+    return L.apply_ffn(cfg, p, h), zero_aux()
+
+
+def apply_layer_decode(cfg: ModelConfig, spec: LayerSpec, p: Dict,
+                       x: jax.Array, cache: Dict, lengths: jax.Array,
+                       flags: RunFlags):
+    """One layer, one decode token. Returns (x, new_cache)."""
+    h = L.apply_norm(cfg, p["mixer_norm"], x)
+    if spec.mixer == "attn":
+        y_mix, new_cache = A.decode_self_attention(
+            cfg, p["mixer"], h, cache, lengths,
+            seq_axes=flags.decode_seq_axes or None,
+            batch_axes=flags.token_axes)
+    elif spec.mixer == "mla":
+        y_mix, new_cache = MLA.mla_decode_attention(
+            cfg, p["mixer"], h, cache, lengths,
+            seq_axes=flags.decode_seq_axes or None,
+            batch_axes=flags.token_axes, absorbed=flags.mla_absorbed)
+    elif spec.mixer == "mamba":
+        y_mix, new_cache = MB.mamba_decode(cfg, p["mixer"], h, cache)
+    elif spec.mixer == "mlstm":
+        y_mix, new_cache = XL.mlstm_decode(cfg, p["mixer"], h, cache)
+    elif spec.mixer == "slstm":
+        y_mix, new_cache = XL.slstm_decode(cfg, p["mixer"], h, cache)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.parallel and spec.ffn != "none":
+        y_ffn, _ = _apply_ffn(cfg, spec, p["ffn"], h, flags)
+        return x + y_mix + y_ffn, new_cache
+    x = x + y_mix
+    if spec.ffn != "none":
+        h = L.apply_norm(cfg, p["ffn_norm"], x)
+        y_ffn, _ = _apply_ffn(cfg, spec, p["ffn"], h, flags)
+        x = x + y_ffn
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model: train / prefill forward
+# ---------------------------------------------------------------------------
+
+def _embed_input(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    extra = batch.get("vision_embeds", batch.get("frame_embeds"))
+    x = L.embed_tokens(cfg, params["embed"], batch.get("tokens"), extra)
+    return x
+
+
+def _constrain(x, flags):
+    if flags.act_spec is not None:
+        x = jax.lax.with_sharding_constraint(x, flags.act_spec)
+    return x
+
+
+# numerics-sensitive weights stay fp32: SSM A / dt projection (exp/softplus)
+# and the MoE router (top-k selection must not flip under bf16 logits)
+_PRECAST_EXCLUDE = ("a_log", "dt_w", "router")
+
+
+def _precast(pp, cfg: ModelConfig, flags: RunFlags):
+    """Cast >=2-D weights to the compute dtype while still sharded, so SPMD
+    gathers bf16 (downstream ``.astype`` calls become no-ops)."""
+    if not flags.cast_params_early:
+        return pp
+    dt = jnp.dtype(cfg.dtype)
+
+    def f(path, a):
+        name = getattr(path[-1], "key", None) if path else None
+        if a.ndim >= 2 and name not in _PRECAST_EXCLUDE:
+            return a.astype(dt)
+        return a
+
+    return jax.tree_util.tree_map_with_path(f, pp)
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict[str, jax.Array], *,
+            flags: RunFlags = RunFlags(), want_cache: bool = False,
+            lengths: Optional[jax.Array] = None):
+    """Full-sequence forward. Returns (hidden (B,S,D), caches, aux)."""
+    x = _embed_input(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    aux = zero_aux()
+    x = _constrain(x, flags)
+
+    pre_caches = []
+    for spec, p in zip(cfg.prelayers, params["prelayers"]):
+        x, c, a = apply_layer_seq(cfg, spec, _precast(p, cfg, flags), x,
+                                  positions, lengths, flags, want_cache)
+        pre_caches.append(c)
+        aux = _add_aux(aux, a)
+
+    def period_body(carry, pp):
+        x, aux = carry
+        x = _constrain(x, flags)
+        pp = _precast(pp, cfg, flags)
+        caches = []
+        for spec, p in zip(cfg.period, pp):
+            x, c, a = apply_layer_seq(cfg, spec, p, x, positions, lengths,
+                                      flags, want_cache)
+            caches.append(c)
+            aux = _add_aux(aux, a)
+        return (x, aux), tuple(caches)
+
+    body = period_body
+    if flags.remat == "full":
+        body = jax.remat(period_body)
+    if flags.unroll_layers:
+        cache_list = []
+        carry = (x, aux)
+        for i in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a: a[i], params["period"])
+            carry, caches = body(carry, pp)
+            cache_list.append(caches)
+        (x, aux) = carry
+        period_caches = None
+        if want_cache:
+            if cache_list:
+                period_caches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *cache_list)
+            else:            # zero-period variant lowers
+                period_caches = tuple(
+                    jax.tree.map(lambda a: jnp.zeros((0,) + a.shape, a.dtype),
+                                 layer_cache(cfg, s, x.shape[0], x.shape[1]))
+                    for s in cfg.period)
+    else:
+        (x, aux), period_caches = jax.lax.scan(body, (x, aux),
+                                               params["period"])
+    x = L.apply_norm(cfg, params["out_norm"], x)
+    caches = None
+    if want_cache:
+        caches = {"prelayers": tuple(pre_caches), "period": period_caches}
+    return x, caches, aux
+
+
+def train_logits(cfg: ModelConfig, params, batch, *, flags=RunFlags()):
+    x, _, aux = forward(cfg, params, batch, flags=flags)
+    return L.unembed(cfg, params["embed"], x), aux
+
+
+def prefill(cfg: ModelConfig, params, batch, lengths, *, flags=RunFlags()):
+    """Prompt ingestion. Returns (last-position logits (B,V), cache)."""
+    x, caches, _ = forward(cfg, params, batch, flags=flags, want_cache=True,
+                           lengths=lengths)
+    B = x.shape[0]
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    logits = L.unembed(cfg, params["embed"], last)
+    caches["lengths"] = lengths
+    return logits, caches
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *,
+                flags: RunFlags = RunFlags()):
+    """One token for every sequence. tokens: (B,) or (B,1) int32 (or
+    (B,1,D) frame embeds for input_mode=embeds). Returns (logits, cache)."""
+    lengths = cache["lengths"]
+    if cfg.input_mode == "embeds":
+        x = tokens.astype(jnp.dtype(cfg.dtype)) @ \
+            params["embed"]["frame_proj"].astype(jnp.dtype(cfg.dtype))
+    else:
+        tok = tokens if tokens.ndim == 2 else tokens[:, None]
+        x = params["embed"]["tok"].astype(jnp.dtype(cfg.dtype))[tok]
+        x = x * jnp.asarray(cfg.embedding_multiplier, jnp.dtype(cfg.dtype))
+    if cfg.pos_emb == "sincos":
+        x = x + L.sincos_pos_emb(lengths[:, None], cfg.d_model
+                                 ).astype(x.dtype)
+
+    new_pre = []
+    for spec, p, c in zip(cfg.prelayers, params["prelayers"],
+                          cache["prelayers"]):
+        x, c2 = apply_layer_decode(cfg, spec, p, x, c, lengths, flags)
+        new_pre.append(c2)
+
+    def body(x, pc):
+        pp, cc = pc
+        pp = _precast(pp, cfg, flags)
+        new_caches = []
+        for spec, p, c in zip(cfg.period, pp, cc):
+            x, c2 = apply_layer_decode(cfg, spec, p, x, c, lengths, flags)
+            new_caches.append(c2)
+        return x, tuple(new_caches)
+
+    if flags.unroll_layers:
+        new_list = []
+        for i in range(cfg.n_periods):
+            pc = jax.tree.map(lambda a: a[i],
+                              (params["period"], cache["period"]))
+            x, caches = body(x, pc)
+            new_list.append(caches)
+        if new_list:
+            new_period = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+        else:                # zero-period variant lowers
+            new_period = cache["period"]
+    else:
+        x, new_period = jax.lax.scan(body, x,
+                                     (params["period"], cache["period"]))
+    x = L.apply_norm(cfg, params["out_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x[:, 0])
+    return logits, {"prelayers": tuple(new_pre), "period": new_period,
+                    "lengths": lengths + 1}

@@ -1,0 +1,309 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both run in the paper's *stabilized recurrent form* (exponential gating with a
+running stabilizer ``m``) via ``lax.scan`` over time. This is the definitional
+form; the chunkwise-parallel mLSTM is a kernel-level optimization we document
+rather than implement (xlstm-125m contributes negligible FLOPs at cluster
+scale, and its roofline entry uses analytic FLOPs — see EXPERIMENTS.md).
+
+State runs in float32; projections in the model compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    x = cfg.xlstm
+    di = x.expand * cfg.d_model
+    return di, x.n_heads, di // x.n_heads
+
+
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    x = cfg.xlstm
+    return x.n_heads, cfg.d_model // x.n_heads
+
+
+TIME_CHUNK = 64    # sqrt-style BPTT checkpointing for the recurrent scans
+
+
+def _chunked_time_scan(step, carry, xs, ys_time_major: bool = True):
+    """scan(step, carry, xs) with sqrt(S) gradient checkpointing: the outer
+    scan (rematted) saves only chunk-boundary carries; the inner scan's
+    per-step state is recomputed chunk-locally in the backward pass. Cuts the
+    saved-state memory of a length-S recurrence from O(S) to O(sqrt(S))
+    (xlstm train_4k: 164 GiB -> ~5 GiB of mLSTM matrix-memory saves)."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    chunk = TIME_CHUNK
+    while S % chunk:
+        chunk //= 2
+    if chunk <= 1:
+        return jax.lax.scan(step, carry, xs)
+    nc = S // chunk
+
+    def outer(c, xs_chunk):
+        return jax.lax.scan(step, c, xs_chunk)
+
+    xs_r = jax.tree.map(
+        lambda a: a.reshape((nc, chunk) + a.shape[1:]), xs)
+    carry, ys = jax.lax.scan(jax.remat(outer), carry, xs_r)
+    ys = jax.tree.map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    di, nh, dh = _mlstm_dims(cfg)
+    dc = cfg.xlstm.conv_width
+    return {
+        "w_up": ParamDef((D, 2 * di), ("embed", "dinner")),
+        "conv_w": ParamDef((di, dc), ("dinner", "conv"), scale=1.0),
+        "conv_b": ParamDef((di,), ("dinner",), init="zeros"),
+        "wq": ParamDef((di, di), ("dinner", None)),
+        "wk": ParamDef((di, di), ("dinner", None)),
+        "wv": ParamDef((di, di), ("dinner", None)),
+        "w_i": ParamDef((di, nh), ("dinner", None), scale=0.1),
+        "b_i": ParamDef((nh,), (None,), init="zeros"),
+        "w_f": ParamDef((di, nh), ("dinner", None), scale=0.1),
+        "b_f": ParamDef((nh,), (None,), init="ones", scale=3.0),
+        "w_down": ParamDef((di, D), ("dinner", "embed")),
+        "skip_scale": ParamDef((di,), ("dinner",), init="ones"),
+    }
+
+
+def _mlstm_qkv(cfg: ModelConfig, p: Dict, x: jax.Array):
+    from repro.models.mamba import _causal_conv
+    di, nh, dh = _mlstm_dims(cfg)
+    dt = x.dtype
+    uz = x @ p["w_up"].astype(dt)
+    u, z = jnp.split(uz, 2, -1)                                  # (B,S,di)
+    uc = jax.nn.silu(_causal_conv(u, p["conv_w"], p["conv_b"]))
+    B, S, _ = u.shape
+    q = (uc @ p["wq"].astype(dt)).reshape(B, S, nh, dh)
+    k = (uc @ p["wk"].astype(dt)).reshape(B, S, nh, dh) / jnp.sqrt(
+        jnp.asarray(dh, dt))
+    v = (u @ p["wv"].astype(dt)).reshape(B, S, nh, dh)
+    i_pre = (u @ p["w_i"].astype(dt) + p["b_i"].astype(dt)).astype(jnp.float32)
+    f_pre = (u @ p["w_f"].astype(dt) + p["b_f"].astype(dt)).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre, z, uc
+
+
+def _mlstm_step(C, n, m, q, k, v, i_pre, f_pre):
+    """One recurrent step. C: (B,nh,dh,dh); n: (B,nh,dh); m: (B,nh).
+    q,k,v: (B,nh,dh); gates (B,nh). Returns new state + h (B,nh,dh)."""
+    logf = -jax.nn.softplus(-f_pre)              # log sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * (
+        vf[..., :, None] * kf[..., None, :])
+    n = f_s[..., None] * n + i_s[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return C, n, m_new, h
+
+
+def mlstm_mixer(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    di, nh, dh = _mlstm_dims(cfg)
+    B, S, D = x.shape
+    dt = x.dtype
+    q, k, v, i_pre, f_pre, z, uc = _mlstm_qkv(cfg, p, x)
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t
+        C, n, m, h = _mlstm_step(C, n, m, qt, kt, vt, it, ft)
+        return (C, n, m), h
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    _, hs = _chunked_time_scan(step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, di).astype(dt)
+    h = h + uc * p["skip_scale"].astype(dt)
+    h = h * jax.nn.silu(z)
+    return h @ p["w_down"].astype(dt)
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int):
+    di, nh, dh = _mlstm_dims(cfg)
+    dc = cfg.xlstm.conv_width
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, dc - 1, di), jnp.bfloat16)}
+
+
+def mlstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    di, nh, dh = _mlstm_dims(cfg)
+    dt = x.dtype
+    uz = x[:, 0] @ p["w_up"].astype(dt)
+    u, z = jnp.split(uz, 2, -1)
+    window = jnp.concatenate([cache["conv"].astype(dt), u[:, None]], axis=1)
+    uc = jax.nn.silu(jnp.einsum("bcd,dc->bd", window, p["conv_w"].astype(dt))
+                     + p["conv_b"].astype(dt))
+    B = u.shape[0]
+    q = (uc @ p["wq"].astype(dt)).reshape(B, nh, dh)
+    k = (uc @ p["wk"].astype(dt)).reshape(B, nh, dh) / jnp.sqrt(
+        jnp.asarray(dh, dt))
+    v = (u @ p["wv"].astype(dt)).reshape(B, nh, dh)
+    i_pre = (u @ p["w_i"].astype(dt) + p["b_i"].astype(dt)).astype(jnp.float32)
+    f_pre = (u @ p["w_f"].astype(dt) + p["b_f"].astype(dt)).astype(jnp.float32)
+    C, n, m, h = _mlstm_step(cache["C"], cache["n"], cache["m"],
+                             q, k, v, i_pre, f_pre)
+    h = h.reshape(B, di).astype(dt)
+    h = h + uc * p["skip_scale"].astype(dt)
+    h = h * jax.nn.silu(z)
+    y = (h @ p["w_down"].astype(dt))[:, None]
+    return y, {"C": C, "n": n, "m": m, "conv": window[:, 1:].astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    nh, dh = _slstm_dims(cfg)
+    out = {"w_out": ParamDef((D, D), ("embed", None))}
+    for g in ("z", "i", "f", "o"):
+        out[f"w_{g}"] = ParamDef((D, D), ("embed", "dinner"))
+        out[f"r_{g}"] = ParamDef((nh, dh, dh), (None, "dinner", None), scale=0.5)
+        out[f"b_{g}"] = ParamDef((D,), ("dinner",),
+                                 init="ones" if g == "f" else "zeros", scale=2.0)
+    return out
+
+
+def _slstm_step(p, state, xt):
+    """state: (c,n,h,m) each (B,nh,dh); xt: dict of gate pre-activations."""
+    c, n, h, m = state
+    def rec(g):
+        return xt[g] + jnp.einsum("bhd,hde->bhe", h, p[f"r_{g}"].astype(jnp.float32))
+    z = jnp.tanh(rec("z"))
+    o = jax.nn.sigmoid(rec("o"))
+    i_pre, f_pre = rec("i"), rec("f")
+    logf = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new)
+
+
+def _slstm_gates(cfg, p, x):
+    nh, dh = _slstm_dims(cfg)
+    B, S, D = x.shape
+    out = {}
+    for g in ("z", "i", "f", "o"):
+        pre = x @ p[f"w_{g}"].astype(x.dtype) + p[f"b_{g}"].astype(x.dtype)
+        out[g] = pre.reshape(B, S, nh, dh).astype(jnp.float32)
+    return out
+
+
+def slstm_mixer(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    nh, dh = _slstm_dims(cfg)
+    B, S, D = x.shape
+    dt = x.dtype
+    gates = _slstm_gates(cfg, p, x)
+
+    def step(state, xt):
+        state = _slstm_step(p, state, xt)
+        return state, state[2]
+
+    zero = jnp.zeros((B, nh, dh), jnp.float32)
+    state0 = (zero, zero, zero, jnp.full((B, nh, dh), -1e30, jnp.float32))
+    xs = {g: v.swapaxes(0, 1) for g, v in gates.items()}
+    _, hs = _chunked_time_scan(step, state0, xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(dt)
+    return h @ p["w_out"].astype(dt)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int):
+    nh, dh = _slstm_dims(cfg)
+    zero = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero,
+            "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+def xlstm_prefill_cache(cfg: ModelConfig, mixer: str, p: Dict, x: jax.Array,
+                        lengths: jax.Array) -> Dict:
+    """Recurrent state after consuming ``lengths`` tokens of x; steps beyond a
+    row's length leave the state unchanged (select-masked)."""
+    from repro.models.mamba import gather_window
+    B, S, D = x.shape
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])      # (B,S)
+
+    def masked(state_new, state_old, v):
+        return jax.tree.map(
+            lambda a, b: jnp.where(v.reshape((B,) + (1,) * (a.ndim - 1)), a, b),
+            state_new, state_old)
+
+    if mixer == "mlstm":
+        q, k, v, i_pre, f_pre, z, uc = _mlstm_qkv(cfg, p, x)
+        di, nh, dh = _mlstm_dims(cfg)
+
+        def step(carry, t):
+            C, n, m = carry
+            qt, kt, vt, it, ft, vt_mask = t
+            C2, n2, m2, _ = _mlstm_step(C, n, m, qt, kt, vt, it, ft)
+            (C, n, m) = masked((C2, n2, m2), (C, n, m), vt_mask)
+            return (C, n, m), None
+
+        C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, nh, dh), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+        xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, i_pre, f_pre)) \
+            + (valid.swapaxes(0, 1),)
+        (C, n, m), _ = jax.lax.scan(step, (C0, n0, m0), xs)
+        dt = x.dtype
+        u = jnp.split(x @ p["w_up"].astype(dt), 2, -1)[0]
+        dc = cfg.xlstm.conv_width
+        return {"C": C, "n": n, "m": m,
+                "conv": gather_window(u, lengths, dc - 1).astype(jnp.bfloat16)}
+
+    gates = _slstm_gates(cfg, p, x)
+    nh, dh = _slstm_dims(cfg)
+
+    def step(state, t):
+        xt, vt = t
+        state2 = _slstm_step(p, state, xt)
+        return masked(state2, state, vt), None
+
+    zero = jnp.zeros((B, nh, dh), jnp.float32)
+    st0 = (zero, zero, zero, jnp.full((B, nh, dh), -1e30, jnp.float32))
+    xs = ({g: v.swapaxes(0, 1) for g, v in gates.items()},
+          valid.swapaxes(0, 1))
+    (c, n, h, m), _ = jax.lax.scan(step, st0, xs)
+    return {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_decode(cfg: ModelConfig, p: Dict, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    nh, dh = _slstm_dims(cfg)
+    dt = x.dtype
+    gates = {g: v[:, 0] for g, v in _slstm_gates(cfg, p, x).items()}
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(p, state, gates)
+    y = (h.reshape(x.shape[0], -1).astype(dt) @ p["w_out"].astype(dt))[:, None]
+    return y, {"c": c, "n": n, "h": h, "m": m}

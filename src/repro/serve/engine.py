@@ -1,0 +1,163 @@
+"""Batched serving engine with slot-based continuous batching.
+
+The engine owns a fixed-shape (max_batch, max_seq) KV/state cache. Requests
+occupy slots; new requests are prefetched with a single-row prefill whose
+cache rows are spliced into the live batch cache, so decoding never stalls
+the whole batch for one admission (continuous batching). Finished slots free
+immediately. Greedy or temperature sampling.
+
+This is the ``jax_serve`` runtime the TACC execution layer provisions for
+inference tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (RunFlags, decode_step, init_cache,
+                                      prefill)
+
+
+@dataclass
+class GenerationResult:
+    request_id: int
+    prompt: List[int]
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class _Slot:
+    request: Optional[GenerationResult] = None
+    remaining: int = 0
+    last_token: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256, flags: RunFlags = RunFlags(),
+                 eos_id: Optional[int] = None, seed: int = 0):
+        if cfg.input_mode != "tokens":
+            raise ValueError("ServeEngine drives token models; modality-stub "
+                             "archs are exercised via prefill/decode directly")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.flags = flags
+        self.eos_id = eos_id
+        self._next_id = 0
+        self._slots = [_Slot() for _ in range(max_batch)]
+        self.cache = init_cache(cfg, max_batch, max_seq)
+        self._rng = np.random.RandomState(seed)
+        self._prefill1 = jax.jit(
+            lambda p, b, l: prefill(cfg, p, b, l, flags=flags))
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t, flags=flags))
+        self._steps = 0
+
+    # -- admission ---------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s.request is None:
+                return i
+        return None
+
+    def add_request(self, prompt: List[int], max_new: int = 32
+                    ) -> Optional[GenerationResult]:
+        """Prefill one row and splice it into the live cache. Returns None if
+        no slot is free (caller queues)."""
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        prompt = list(prompt)[: self.max_seq - max_new - 1]
+        toks = np.zeros((1, self.max_seq), np.int32)
+        toks[0, :len(prompt)] = prompt
+        lengths = jnp.asarray([len(prompt)], jnp.int32)
+        logits, row_cache = self._prefill1(
+            self.params, {"tokens": jnp.asarray(toks)}, lengths)
+        self._splice(slot, row_cache)
+        req = GenerationResult(self._next_id, prompt)
+        self._next_id += 1
+        first = self._pick(np.asarray(logits)[0])
+        req.tokens.append(int(first))
+        self._slots[slot] = _Slot(req, max_new - 1, int(first))
+        return req
+
+    def _splice(self, slot: int, row_cache) -> None:
+        def put(dst, src):          # prelayer caches: batch is axis 0
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=0)
+
+        def put1(dst, src):         # stacked period caches: batch is axis 1
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=1)
+
+        new = {}
+        new["prelayers"] = jax.tree.map(put, self.cache["prelayers"],
+                                        row_cache["prelayers"])
+        new["period"] = jax.tree.map(put1, self.cache["period"],
+                                     row_cache["period"])
+        # cache holds exactly len(prompt) entries; the first generated token
+        # is written at position lengths on its first decode step
+        new["lengths"] = self.cache["lengths"].at[slot].set(
+            row_cache["lengths"][0])
+        self.cache = new
+
+    def _pick(self, logits: np.ndarray, temperature: float = 0.0) -> int:
+        if temperature <= 0:
+            return int(logits.argmax())
+        z = logits / temperature
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    # -- decode loop -------------------------------------------------------
+
+    def active(self) -> int:
+        return sum(s.request is not None for s in self._slots)
+
+    def step(self) -> List[GenerationResult]:
+        """One decode step for every occupied slot. Returns newly finished."""
+        tokens = jnp.asarray([s.last_token for s in self._slots], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        logits = np.asarray(logits)
+        finished = []
+        self._steps += 1
+        for i, s in enumerate(self._slots):
+            if s.request is None:
+                continue
+            nxt = self._pick(logits[i])
+            s.request.tokens.append(nxt)
+            s.last_token = nxt
+            s.remaining -= 1
+            hit_eos = self.eos_id is not None and nxt == self.eos_id
+            total = s.request and self.cache["lengths"][i]
+            if s.remaining <= 0 or hit_eos:
+                s.request.done = True
+                finished.append(s.request)
+                self._slots[i] = _Slot()
+        return finished
+
+    def run(self, requests: List[List[int]], max_new: int = 16
+            ) -> List[GenerationResult]:
+        """Serve a workload of prompts to completion (continuous batching)."""
+        queue = list(requests)
+        results: List[GenerationResult] = []
+        while queue or self.active():
+            while queue:
+                r = self.add_request(queue[0], max_new=max_new)
+                if r is None:
+                    break
+                results.append(r)
+                queue.pop(0)
+            if self.active():
+                self.step()
+        return results

@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, init_opt, adamw_update, lr_at
+from repro.train.step import TrainConfig, build_train_step, init_train_state

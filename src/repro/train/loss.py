@@ -1,0 +1,25 @@
+"""Cross-entropy loss with ignore-index masking, z-loss, and MoE aux terms."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -100
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *,
+                  z_loss: float = 1e-4) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """logits (B,S,V) f32; labels (B,S) int32 with IGNORE masking."""
+    mask = (labels != IGNORE)
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    n = jnp.maximum(mask.sum(), 1)
+    ce = nll.sum() / n
+    zl = z_loss * (jnp.square(lse) * mask).sum() / n
+    acc = ((logits.argmax(-1) == safe) & mask).sum() / n
+    return ce + zl, {"ce": ce, "z_loss": zl, "accuracy": acc,
+                     "tokens": n.astype(jnp.float32)}

@@ -1,0 +1,83 @@
+"""AdamW from scratch (no optax): decoupled weight decay, bias correction,
+global-norm clipping, warmup+cosine schedule, configurable moment dtypes
+(bf16 moments cut optimizer HBM by 2x on the ≥100B configs — see
+EXPERIMENTS.md §Roofline memory notes)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: Any = jnp.float32
+    v_dtype: Any = jnp.float32
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt(params: Any, cfg: OptConfig) -> Dict[str, Any]:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.m_dtype), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.v_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads: Any, opt: Dict[str, Any], params: Any,
+                 cfg: OptConfig) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(gnorm > cfg.clip_norm, cfg.clip_norm / (gnorm + 1e-9), 1.0)
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m1 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        u = (m1 / b1c) / (jnp.sqrt(v1 / b2c) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p1 = p.astype(jnp.float32) - lr * (u + decay * p.astype(jnp.float32))
+        return (p1.astype(p.dtype), m1.astype(cfg.m_dtype),
+                v1.astype(cfg.v_dtype))
+
+    flat, treedef = jax.tree.flatten(params)
+    gflat = jax.tree.leaves(grads)
+    mflat = jax.tree.leaves(opt["m"])
+    vflat = jax.tree.leaves(opt["v"])
+    trip = [upd(p, g, m, v) for p, g, m, v in zip(flat, gflat, mflat, vflat)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in trip])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in trip])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in trip])
+    stats = {"grad_norm": gnorm, "lr": lr,
+             "param_norm": global_norm(new_params)}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, stats

@@ -1,0 +1,146 @@
+"""Hypothesis property tests on the control plane's invariants:
+cluster allocation safety, CAS store, checkpoint skeleton codec, schema
+hashing, sharding-rule divisibility fallback."""
+import string
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import _from_skeleton, _to_skeleton
+from repro.core import Cluster, ResourceSpec, TaskSpec
+from repro.core.compiler import ArtifactStore
+from repro.models.params import DEFAULT_RULES, logical_to_spec
+
+
+# -- cluster allocation safety ------------------------------------------------
+
+ops_strategy = st.lists(
+    st.one_of(
+        st.tuples(st.just("alloc"), st.integers(1, 96), st.booleans()),
+        st.tuples(st.just("release"), st.integers(0, 30), st.booleans()),
+        st.tuples(st.just("fail"), st.integers(0, 15), st.booleans()),
+        st.tuples(st.just("recover"), st.integers(0, 15), st.booleans()),
+    ), min_size=1, max_size=60)
+
+
+@given(ops_strategy)
+@settings(max_examples=60, deadline=None)
+def test_cluster_invariants_hold_under_any_sequence(ops):
+    c = Cluster(n_pods=2, hosts_per_pod=8, chips_per_host=4)
+    node_ids = list(c.nodes)
+    live = []
+    counter = [0]
+    for op, arg, flag in ops:
+        if op == "alloc":
+            jid = f"j{counter[0]}"
+            counter[0] += 1
+            if c.try_allocate(jid, arg, prefer_single_pod=flag) is not None:
+                live.append(jid)
+        elif op == "release" and live:
+            c.release(live.pop(arg % len(live)))
+        elif op == "fail":
+            victims = c.fail_node(node_ids[arg % len(node_ids)])
+            for v in victims:
+                c.release(v)
+                if v in live:
+                    live.remove(v)
+        elif op == "recover":
+            nid = node_ids[arg % len(node_ids)]
+            if not any(n == nid for alloc in c.allocations.values()
+                       for n, _ in alloc):
+                c.recover_node(nid)
+        # invariants after every op
+        for n in c.nodes.values():
+            assert 0 <= n.used <= n.chips
+        for jid, alloc in c.allocations.items():
+            for nid, k in alloc:
+                assert k >= 1
+        total_alloc = sum(k for a in c.allocations.values() for _, k in a)
+        assert total_alloc == c.used_chips()
+
+
+@given(st.integers(1, 256), st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_gang_allocation_all_or_nothing(chips, prefer):
+    c = Cluster(n_pods=2, hosts_per_pod=16, chips_per_host=4)
+    before = c.free_chips()
+    alloc = c.try_allocate("j", chips, prefer)
+    if alloc is None:
+        assert c.free_chips() == before
+    else:
+        assert sum(k for _, k in alloc) == chips
+        assert c.free_chips() == before - chips
+        if prefer and chips <= 64:     # fits one pod => stays in one pod
+            assert not c.crosses_pods("j")
+
+
+# -- CAS store -----------------------------------------------------------------
+
+@given(st.lists(st.binary(min_size=0, max_size=256), min_size=1, max_size=12))
+@settings(max_examples=30, deadline=None)
+def test_cas_roundtrip_and_dedup(tmp_path_factory, blobs):
+    store = ArtifactStore(str(tmp_path_factory.mktemp("cas")))
+    digests = [store.put(b) for b in blobs]
+    for b, d in zip(blobs, digests):
+        assert store.get(d) == b
+    before = store.stats["put_bytes"]
+    again = [store.put(b) for b in blobs]
+    assert again == digests
+    assert store.stats["put_bytes"] == before          # 100% dedup on re-put
+
+
+# -- checkpoint skeleton codec --------------------------------------------------
+
+leaves = st.one_of(st.integers(-5, 5), st.floats(allow_nan=False,
+                                                 allow_infinity=False,
+                                                 width=32))
+trees = st.recursive(
+    leaves,
+    lambda kids: st.one_of(
+        st.lists(kids, max_size=3).map(tuple),
+        st.dictionaries(st.text(string.ascii_lowercase, min_size=1,
+                                max_size=4), kids, max_size=3)),
+    max_leaves=12)
+
+
+@given(trees)
+@settings(max_examples=60, deadline=None)
+def test_skeleton_codec_roundtrip(tree):
+    acc = []
+    skel = _to_skeleton(tree, acc)
+    back = _from_skeleton(skel, acc)
+    assert back == tree
+
+
+# -- schema hashing ---------------------------------------------------------------
+
+@given(st.text(string.ascii_letters, min_size=1, max_size=12),
+       st.integers(1, 512), st.integers(0, 10))
+@settings(max_examples=40, deadline=None)
+def test_spec_hash_stable_and_sensitive(name, chips, prio):
+    s1 = TaskSpec(name=name, resources=ResourceSpec(chips=chips,
+                                                    priority=prio),
+                  entry={"arch": "tacc-100m"})
+    s2 = TaskSpec.from_dict(s1.to_dict())
+    assert s1.spec_hash() == s2.spec_hash()
+    s3 = TaskSpec(name=name + "x", resources=ResourceSpec(chips=chips,
+                                                          priority=prio),
+                  entry={"arch": "tacc-100m"})
+    assert s1.spec_hash() != s3.spec_hash()
+
+
+# -- sharding rules ---------------------------------------------------------------
+
+@given(st.integers(1, 8).map(lambda k: 2 ** k), st.integers(1, 64),
+       st.sampled_from(["embed", "heads", "mlp", "experts", "vocab"]))
+@settings(max_examples=60, deadline=None)
+def test_logical_to_spec_divisibility_fallback(dim_pow2, odd, axis_name):
+    sizes = {"data": 16, "model": 16}
+    spec = logical_to_spec((axis_name,), DEFAULT_RULES, (odd * dim_pow2,),
+                           sizes)
+    part = spec[0]
+    if part is not None:
+        mesh_axes = (part,) if isinstance(part, str) else part
+        total = int(np.prod([sizes[a] for a in mesh_axes]))
+        assert (odd * dim_pow2) % total == 0

@@ -1,0 +1,30 @@
+"""Multi-device integration tests (8 forced host devices, subprocess so the
+main test process keeps its single-device jax)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
+
+CHECKS = [
+    "moe_ep_matches_oracle",
+    "moe_ep_gradients",
+    "moe_allgather_combine",
+    "sharded_decode_attention",
+    "sharded_mla_decode",
+    "distributed_train_step_parity",
+    "tiny_dryrun",
+]
+
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_distributed(check):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, SCRIPT, check],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, (
+        f"--- stdout ---\n{r.stdout[-3000:]}\n--- stderr ---\n{r.stderr[-3000:]}")
+    assert f"CHECK {check} PASSED" in r.stdout

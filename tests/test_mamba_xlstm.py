@@ -1,0 +1,122 @@
+"""Recurrent mixers: chunk-count invariance, prefill-state == step-by-step
+state, masked ragged prefill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_defs, init_params
+from repro.models import mamba as MB
+from repro.models import xlstm as XL
+
+
+def _jamba_layer():
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda a: a[0], params["period"][0]["mixer"])
+    return cfg, p
+
+
+def test_mamba_chunk_count_invariance():
+    cfg, p = _jamba_layer()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    outs = [MB.mamba_mixer(cfg, p, x, n_chunks=c) for c in (1, 2, 4, 8)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_decode_matches_scan():
+    """Running decode token-by-token == full-sequence mixer output."""
+    cfg, p = _jamba_layer()
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model),
+                          jnp.float32)
+    full = MB.mamba_mixer(cfg, p, x, n_chunks=2)
+    cache = MB.mamba_init_cache(cfg, B)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32), cache)
+    outs = []
+    for t in range(S):
+        y, cache = MB.mamba_decode(cfg, p, x[:, t:t + 1], cache)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=2e-3, rtol=1e-2)
+
+
+def test_mamba_prefill_cache_matches_decode_chain():
+    cfg, p = _jamba_layer()
+    B, S, Sp = 2, 16, 11
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model),
+                          jnp.float32)
+    lens = jnp.asarray([Sp, Sp], jnp.int32)
+    pc = MB.mamba_prefill_cache(cfg, p, x, lens)
+    cache = MB.mamba_init_cache(cfg, B)
+    for t in range(Sp):
+        _, cache = MB.mamba_decode(cfg, p, x[:, t:t + 1], cache)
+    np.testing.assert_allclose(np.asarray(pc["ssm"]), np.asarray(cache["ssm"]),
+                               atol=2e-3, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(pc["conv"], np.float32),
+                               np.asarray(cache["conv"], np.float32),
+                               atol=2e-2)
+
+
+def test_mamba_prefill_cache_ignores_padding():
+    cfg, p = _jamba_layer()
+    B, S, Sp = 1, 16, 9
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, cfg.d_model),
+                          jnp.float32)
+    lens = jnp.asarray([Sp], jnp.int32)
+    c1 = MB.mamba_prefill_cache(cfg, p, x, lens)
+    # garbage beyond Sp must not matter
+    x2 = x.at[:, Sp:].set(99.0)
+    c2 = MB.mamba_prefill_cache(cfg, p, x2, lens)
+    np.testing.assert_allclose(np.asarray(c1["ssm"]), np.asarray(c2["ssm"]),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("mixer", ["mlstm", "slstm"])
+def test_xlstm_decode_matches_scan(mixer):
+    cfg = get_config("xlstm-125m", smoke=True)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    pos = 0 if mixer == "mlstm" else 3
+    p = jax.tree.map(lambda a: a[0], params["period"][pos]["mixer"])
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, cfg.d_model),
+                          jnp.float32)
+    mix = XL.mlstm_mixer if mixer == "mlstm" else XL.slstm_mixer
+    dec = XL.mlstm_decode if mixer == "mlstm" else XL.slstm_decode
+    init = XL.mlstm_init_cache if mixer == "mlstm" else XL.slstm_init_cache
+    full = mix(cfg, p, x)
+    cache = init(cfg, B)
+    outs = []
+    for t in range(S):
+        y, cache = dec(cfg, p, x[:, t:t + 1], cache)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=2e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("mixer", ["mlstm", "slstm"])
+def test_xlstm_prefill_cache_matches_decode_chain(mixer):
+    cfg = get_config("xlstm-125m", smoke=True)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    pos = 0 if mixer == "mlstm" else 3
+    p = jax.tree.map(lambda a: a[0], params["period"][pos]["mixer"])
+    B, S, Sp = 2, 12, 7
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, cfg.d_model),
+                          jnp.float32)
+    lens = jnp.asarray([Sp, Sp], jnp.int32)
+    pc = XL.xlstm_prefill_cache(cfg, mixer, p, x, lens)
+    dec = XL.mlstm_decode if mixer == "mlstm" else XL.slstm_decode
+    init = XL.mlstm_init_cache if mixer == "mlstm" else XL.slstm_init_cache
+    cache = init(cfg, B)
+    for t in range(Sp):
+        _, cache = dec(cfg, p, x[:, t:t + 1], cache)
+    for k in pc:
+        np.testing.assert_allclose(
+            np.asarray(pc[k], np.float32), np.asarray(cache[k], np.float32),
+            atol=2e-2, err_msg=f"{mixer} cache key {k}")

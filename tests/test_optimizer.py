@@ -1,0 +1,76 @@
+"""AdamW vs a plain numpy reference; schedule; clipping; moment dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import OptConfig, adamw_update, init_opt, lr_at
+
+
+def numpy_adamw(params, grads, m, v, step, cfg):
+    lr = float(lr_at(cfg, jnp.asarray(step)))
+    gn = np.sqrt(sum((g.astype(np.float64) ** 2).sum() for g in grads.values()))
+    scale = min(1.0, cfg.clip_norm / (gn + 1e-9)) if gn > cfg.clip_norm else 1.0
+    out_p, out_m, out_v = {}, {}, {}
+    b1c = 1 - cfg.b1 ** step
+    b2c = 1 - cfg.b2 ** step
+    for k in params:
+        g = grads[k] * scale
+        m1 = cfg.b1 * m[k] + (1 - cfg.b1) * g
+        v1 = cfg.b2 * v[k] + (1 - cfg.b2) * g * g
+        u = (m1 / b1c) / (np.sqrt(v1 / b2c) + cfg.eps)
+        wd = cfg.weight_decay if params[k].ndim >= 2 else 0.0
+        out_p[k] = params[k] - lr * (u + wd * params[k])
+        out_m[k], out_v[k] = m1, v1
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.RandomState(0)
+    params = {"w": rng.randn(4, 3).astype(np.float32),
+              "b": rng.randn(3).astype(np.float32)}
+    grads = {"w": rng.randn(4, 3).astype(np.float32) * 3,
+             "b": rng.randn(3).astype(np.float32) * 3}
+    cfg = OptConfig(lr=1e-2, warmup_steps=0, total_steps=100, clip_norm=1.0)
+    jp = jax.tree.map(jnp.asarray, params)
+    opt = init_opt(jp, cfg)
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    new_p, opt, stats = adamw_update(jax.tree.map(jnp.asarray, grads),
+                                     opt, jp, cfg)
+    ref_p, ref_m, ref_v = numpy_adamw(params, grads, zeros,
+                                      {k: z.copy() for k, z in zeros.items()},
+                                      1, cfg)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(new_p[k]), ref_p[k], atol=1e-5)
+        np.testing.assert_allclose(np.asarray(opt["m"][k]), ref_m[k], atol=1e-5)
+    assert int(opt["step"]) == 1
+
+
+def test_grad_clipping_caps_update_norm():
+    cfg = OptConfig(lr=1e-2, warmup_steps=0, total_steps=10, clip_norm=0.5)
+    p = {"w": jnp.ones((8, 8))}
+    opt = init_opt(p, cfg)
+    g_small = {"w": jnp.full((8, 8), 1e-3)}
+    g_huge = {"w": jnp.full((8, 8), 1e3)}
+    _, _, s1 = adamw_update(g_small, opt, p, cfg)
+    _, _, s2 = adamw_update(g_huge, opt, p, cfg)
+    assert float(s2["grad_norm"]) > float(s1["grad_norm"])
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[1] < lrs[2] <= cfg.lr * 1.001         # warmup rising
+    assert abs(lrs[2] - cfg.lr) < 2e-4               # peak near lr
+    assert abs(lrs[-1] - cfg.lr * 0.1) < 1e-5        # decays to min ratio
+
+
+def test_bf16_moments_dtype():
+    cfg = OptConfig(m_dtype=jnp.bfloat16, v_dtype=jnp.bfloat16)
+    p = {"w": jnp.ones((4, 4))}
+    opt = init_opt(p, cfg)
+    assert opt["m"]["w"].dtype == jnp.bfloat16
+    new_p, opt, _ = adamw_update({"w": jnp.ones((4, 4))}, opt, p, cfg)
+    assert opt["v"]["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.float32

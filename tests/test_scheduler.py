@@ -1,0 +1,186 @@
+"""Scheduling-layer behavior: policy semantics, preemption, quotas, elastic
+sizing, failure/straggler recovery in the discrete-event simulator."""
+import pytest
+
+from repro.core import (Cluster, ClusterSim, Job, JobState, ResourceSpec,
+                        RuntimeEnv, SimConfig, SimEvent, TaskSpec, make_policy)
+from repro.core.compiler import ArtifactStore, TaskCompiler
+
+
+@pytest.fixture()
+def compiler(tmp_path):
+    return TaskCompiler(ArtifactStore(str(tmp_path / "cas")),
+                        str(tmp_path / "work"))
+
+
+def mkjob(compiler, name, chips, steps=100, *, tenant="t", priority=0,
+          min_chips=0, submit=0.0, preemptible=True, est=None, work=None):
+    spec = TaskSpec(
+        name=name, tenant=tenant,
+        resources=ResourceSpec(chips=chips, min_chips=min_chips,
+                               priority=priority, preemptible=preemptible),
+        runtime=RuntimeEnv(backend="shell"),
+        entry={"work_per_step": work if work is not None else chips * 0.9,
+               "comm_frac": 0.05},
+        total_steps=steps,
+        estimated_duration_s=est if est is not None else steps)
+    return Job(id=name, plan=compiler.compile(spec), submit_time=submit)
+
+
+def small_cluster():
+    return Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)   # 32 chips
+
+
+def test_fifo_strict_order(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig())
+    sim.submit(mkjob(compiler, "big", 32, 50, submit=0.0))
+    sim.submit(mkjob(compiler, "small", 4, 10, submit=1.0))
+    sim.run()
+    big, small = sim.jobs["big"], sim.jobs["small"]
+    assert small.first_start >= big.end_time - 1.0   # no overtaking
+
+
+def test_backfill_lets_small_jobs_through(compiler):
+    """A wide head job is blocked behind a running job; short narrow jobs
+    backfill and finish earlier than under FIFO — without delaying the head."""
+    results = {}
+    for pol in ("fifo", "backfill"):
+        c = small_cluster()
+        sim = ClusterSim(c, make_policy(pol), SimConfig())
+        sim.submit(mkjob(compiler, "running", 24, 200, submit=0.0))
+        sim.submit(mkjob(compiler, "wide-head", 32, 50, submit=5.0))
+        for i in range(4):
+            sim.submit(mkjob(compiler, f"tiny{i}", 4, 20, submit=6.0 + i))
+        sim.run()
+        results[pol] = {j.id: sim.jobs[j.id] for j in sim.jobs.values()}
+    fifo_tiny = sum(results["fifo"][f"tiny{i}"].end_time for i in range(4))
+    bf_tiny = sum(results["backfill"][f"tiny{i}"].end_time for i in range(4))
+    assert bf_tiny < fifo_tiny                      # tiny jobs finish earlier
+    head_fifo = results["fifo"]["wide-head"].first_start
+    head_bf = results["backfill"]["wide-head"].first_start
+    assert head_bf <= head_fifo + 30                # head not starved
+
+
+def test_priority_preempts_and_victim_resumes(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("priority"),
+                     SimConfig(checkpoint_interval_s=5))
+    sim.submit(mkjob(compiler, "low", 32, 300, priority=0, submit=0.0))
+    sim.submit(mkjob(compiler, "urgent", 16, 30, priority=10, submit=50.0))
+    m = sim.run()
+    low, urgent = sim.jobs["low"], sim.jobs["urgent"]
+    assert urgent.state == JobState.COMPLETED
+    assert low.state == JobState.COMPLETED
+    assert low.preemptions >= 1
+    assert urgent.first_start < low.end_time
+    # checkpoint-then-preempt: low lost no checkpointed progress
+    assert low.progress == low.total_steps
+
+
+def test_non_preemptible_jobs_are_safe(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("priority"), SimConfig())
+    sim.submit(mkjob(compiler, "pinned", 32, 100, priority=0,
+                     preemptible=False, submit=0.0))
+    sim.submit(mkjob(compiler, "urgent", 16, 20, priority=10, submit=10.0))
+    sim.run()
+    assert sim.jobs["pinned"].preemptions == 0
+
+
+def test_quota_enforced(compiler):
+    c = small_cluster()
+    pol = make_policy("fair", quotas={"greedy": 8})
+    sim = ClusterSim(c, pol, SimConfig())
+    for i in range(4):
+        sim.submit(mkjob(compiler, f"g{i}", 8, 60, tenant="greedy",
+                         submit=float(i)))
+    sim.submit(mkjob(compiler, "other", 8, 60, tenant="other", submit=5.0))
+    for _ in range(30):
+        sim.step()
+    greedy_running = sum(j.chips for j in sim.jobs.values()
+                         if j.tenant == "greedy" and
+                         j.state == JobState.RUNNING)
+    assert greedy_running <= 8
+
+
+def test_fair_share_alternates_tenants(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fair"), SimConfig())
+    # tenant a floods the queue first; tenant b arrives later
+    for i in range(6):
+        sim.submit(mkjob(compiler, f"a{i}", 16, 60, tenant="a",
+                         submit=float(i)))
+    for i in range(3):
+        sim.submit(mkjob(compiler, f"b{i}", 16, 60, tenant="b",
+                         submit=20.0 + i))
+    sim.run()
+    a_jct = sum(sim.jobs[f"a{i}"].end_time - sim.jobs[f"a{i}"].submit_time
+                for i in range(3, 6)) / 3
+    b_jct = sum(sim.jobs[f"b{i}"].end_time - sim.jobs[f"b{i}"].submit_time
+                for i in range(3)) / 3
+    assert b_jct < a_jct    # the late, light tenant is not starved by a's flood
+
+
+def test_goodput_elastic_expands_and_shrinks(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("goodput", rebalance_every=10),
+                     SimConfig())
+    solo = mkjob(compiler, "solo", 32, 400, min_chips=8, submit=0.0)
+    sim.submit(solo)
+    for _ in range(20):
+        sim.step()
+    assert sim.jobs["solo"].chips == 32       # alone: full width
+    sim.submit(mkjob(compiler, "late", 16, 100, min_chips=8, submit=sim.now))
+    for _ in range(60):
+        sim.step()
+    assert sim.jobs["late"].state in (JobState.RUNNING, JobState.COMPLETED)
+    if sim.jobs["late"].state == JobState.RUNNING:
+        assert sim.jobs["solo"].chips < 32    # shrank to admit the newcomer
+
+
+def test_node_failure_restarts_from_checkpoint(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"),
+                     SimConfig(checkpoint_interval_s=10))
+    sim.submit(mkjob(compiler, "victim", 32, 300, submit=0.0))
+    sim.inject(SimEvent(50.0, "fail_node", "pod0/host000"))
+    sim.inject(SimEvent(80.0, "recover_node", "pod0/host000"))
+    m = sim.run()
+    v = sim.jobs["victim"]
+    assert v.state == JobState.COMPLETED
+    assert v.restarts >= 1
+    # progress was lost back to the last checkpoint but never below it
+    losses = [msg for _, msg in v.events if "node-failure" in msg]
+    assert losses
+
+
+def test_straggler_drain_and_requeue(compiler):
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"),
+                     SimConfig(straggler_mitigation=True,
+                               checkpoint_interval_s=10))
+    sim.submit(mkjob(compiler, "j", 16, 200, submit=0.0))
+    sim.inject(SimEvent(30.0, "set_speed", "pod0/host000", 0.2))
+    sim.inject(SimEvent(100.0, "set_speed", "pod0/host000", 1.0))
+    sim.run()
+    j = sim.jobs["j"]
+    assert j.state == JobState.COMPLETED
+    drains = [msg for _, msg in j.events if "straggler-drain" in msg]
+    assert drains, "straggler should have been drained"
+
+
+def test_straggler_mitigation_improves_completion(compiler):
+    """With sync training gated on the slowest node, draining the straggler
+    must beat riding it out."""
+    ends = {}
+    for mit in (False, True):
+        c = small_cluster()
+        sim = ClusterSim(c, make_policy("fifo"),
+                         SimConfig(straggler_mitigation=mit,
+                                   checkpoint_interval_s=10))
+        sim.submit(mkjob(compiler, "j", 16, 300, submit=0.0))
+        sim.inject(SimEvent(20.0, "set_speed", "pod0/host000", 0.15))
+        sim.run()
+        ends[mit] = sim.jobs["j"].end_time
+    assert ends[True] < ends[False] * 0.8

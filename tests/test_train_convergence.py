@@ -1,0 +1,27 @@
+"""Training actually learns: the synthetic affine-modular stream is driven
+well below its unigram entropy within a small step budget."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.train import OptConfig, TrainConfig, build_train_step, init_train_state
+
+
+def test_loss_decreases_markedly():
+    cfg = get_config("tacc-100m", smoke=True)
+    ocfg = OptConfig(lr=2e-3, warmup_steps=10, total_steps=120)
+    state = init_train_state(cfg, ocfg, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(cfg, ocfg, TrainConfig()),
+                   donate_argnums=0)
+    data = SyntheticLM(cfg, 8, 64, seed=1)
+    losses = []
+    for i in range(60):
+        state, m = step(state, jax.tree.map(jnp.asarray, data.batch(i)))
+        losses.append(float(m["loss"]))
+    first = sum(losses[:5]) / 5
+    last = sum(losses[-5:]) / 5
+    assert last < first - 0.5, (first, last)
+    assert last < math.log(cfg.vocab_size), "should beat uniform"
