@@ -1,51 +1,55 @@
 """Goodput-aware elastic sizing (the Pollux-style policy the paper points to)
 vs static gang allocation, on a contention pattern where elasticity pays:
 a long wide job shares the cluster with bursts of short jobs.
+
+The workload is an explicit trace (``repro.data.trace.Trace``) replayed on
+the event-driven simulator; ``--legacy-tick`` runs the fixed-tick engine.
 """
 from __future__ import annotations
 
+import argparse
 import tempfile
 
-from repro.core import (Cluster, ClusterSim, Job, ResourceSpec, RuntimeEnv,
-                        SimConfig, TaskSpec, make_policy)
+from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.data.trace import Trace, TraceJob
 
 
-def build_workload(comp):
-    jobs = []
-    big = TaskSpec(name="big", resources=ResourceSpec(chips=256, min_chips=64),
-                   runtime=RuntimeEnv(backend="shell"),
-                   entry={"work_per_step": 200.0, "comm_frac": 0.08},
-                   total_steps=1500, estimated_duration_s=1500)
-    jobs.append(Job(id="big", plan=comp.compile(big), submit_time=0.0))
+def build_trace() -> Trace:
+    jobs = [TraceJob(id="big", submit_time=0.0, chips=256, min_chips=64,
+                     total_steps=1500, work_per_step=200.0, comm_frac=0.08,
+                     estimated_duration_s=1500)]
     for i in range(12):
-        s = TaskSpec(name=f"burst{i}",
-                     resources=ResourceSpec(chips=64, min_chips=16),
-                     runtime=RuntimeEnv(backend="shell"),
-                     entry={"work_per_step": 50.0, "comm_frac": 0.05},
-                     total_steps=120, estimated_duration_s=120)
-        jobs.append(Job(id=f"burst{i}", plan=comp.compile(s),
-                        submit_time=100.0 + 60.0 * i))
-    return jobs
+        jobs.append(TraceJob(id=f"burst{i}", submit_time=100.0 + 60.0 * i,
+                             chips=64, min_chips=16, total_steps=120,
+                             work_per_step=50.0, comm_frac=0.05,
+                             estimated_duration_s=120))
+    return Trace(jobs=jobs, meta={"scenario": "big+bursts"})
 
 
-def run(policy: str):
+def run(policy: str, engine: str = "event"):
     with tempfile.TemporaryDirectory() as td:
         comp = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
         cluster = Cluster(n_pods=1, hosts_per_pod=64, chips_per_host=4)
         sim = ClusterSim(cluster, make_policy(policy, rebalance_every=30)
                          if policy == "goodput" else make_policy(policy),
-                         SimConfig(tick=2.0, restart_cost_s=15))
-        for j in build_workload(comp):
-            sim.submit(j)
+                         SimConfig(tick=2.0, restart_cost_s=15,
+                                   engine=engine))
+        build_trace().install(sim, comp)
         return sim.run()
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--legacy-tick", action="store_true",
+                    help="use the fixed-tick engine (parity oracle)")
+    args = ap.parse_args(argv)
+    engine = "tick" if args.legacy_tick else "event"
+    print(f"engine={engine}")
     print(f"{'policy':10s} {'makespan':>10s} {'avg_jct':>10s} "
           f"{'avg_wait':>10s} {'resizes~preempt':>16s}")
     for pol in ("fifo", "backfill", "goodput"):
-        m = run(pol)
+        m = run(pol, engine)
         print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_jct']:10.1f} "
               f"{m['avg_wait']:10.1f} {m['preemptions']:16.0f}")
 

@@ -39,11 +39,18 @@ def measure_ckpt(d_model: int, n_layers_mult: int = 2):
     return n_bytes, t_sync, t_async_submit, t_restore
 
 
-def sim_preemption_penalty():
+def sim_preemption_penalty(engine: str = "event"):
     """JCT overhead of one preemption vs checkpoint interval (virtual time)."""
-    from repro.core import (Cluster, ClusterSim, Job, ResourceSpec,
-                            RuntimeEnv, SimConfig, TaskSpec, make_policy)
+    from repro.core import Cluster, ClusterSim, SimConfig, make_policy
     from repro.core.compiler import ArtifactStore, TaskCompiler
+    from repro.data.trace import Trace, TraceJob
+    trace = Trace(jobs=[
+        TraceJob(id="low", submit_time=0.0, chips=32, total_steps=300,
+                 work_per_step=28.0, estimated_duration_s=300),
+        TraceJob(id="hi", submit_time=100.0, chips=16, priority=10,
+                 total_steps=60, work_per_step=14.0,
+                 estimated_duration_s=60),
+    ], meta={"scenario": "one-preemption"})
     rows = []
     for interval in (10, 30, 60, 120):
         with tempfile.TemporaryDirectory() as td:
@@ -51,18 +58,8 @@ def sim_preemption_penalty():
             cluster = Cluster(n_pods=1, hosts_per_pod=8, chips_per_host=4)
             sim = ClusterSim(cluster, make_policy("priority"), SimConfig(
                 checkpoint_interval_s=interval, checkpoint_cost_s=2,
-                restart_cost_s=10))
-            low = TaskSpec(name="low", resources=ResourceSpec(chips=32),
-                           runtime=RuntimeEnv(backend="shell"),
-                           entry={"work_per_step": 28.0}, total_steps=300,
-                           estimated_duration_s=300)
-            hi = TaskSpec(name="hi",
-                          resources=ResourceSpec(chips=16, priority=10),
-                          runtime=RuntimeEnv(backend="shell"),
-                          entry={"work_per_step": 14.0}, total_steps=60,
-                          estimated_duration_s=60)
-            sim.submit(Job(id="low", plan=comp.compile(low), submit_time=0.0))
-            sim.submit(Job(id="hi", plan=comp.compile(hi), submit_time=100.0))
+                restart_cost_s=10, engine=engine))
+            trace.install(sim, comp)
             sim.run()
             j = sim.jobs["low"]
             rows.append((interval, j.end_time, j.preemptions))
@@ -73,13 +70,18 @@ def sim_preemption_penalty():
     return rows
 
 
-def main():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--legacy-tick", action="store_true",
+                    help="use the fixed-tick sim engine (parity oracle)")
+    args = ap.parse_args(argv)
     print(f"{'state_MiB':>10s} {'save_s':>8s} {'async_submit_s':>14s} "
           f"{'restore_s':>10s}")
     for d in (64, 128, 256, 512):
         n, ts, ta, tr = measure_ckpt(d)
         print(f"{n/2**20:10.1f} {ts:8.3f} {ta:14.4f} {tr:10.3f}")
-    sim_preemption_penalty()
+    sim_preemption_penalty("tick" if args.legacy_tick else "event")
 
 
 if __name__ == "__main__":

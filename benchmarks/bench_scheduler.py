@@ -1,66 +1,40 @@
-"""Scheduler policy comparison on a Philly-like synthetic trace — the paper's
-core shared-cluster-efficiency claim (fair-share / gang / backfill / quota /
-preemption over Slurm, §3.1 Scheduling Layer).
+"""Scheduler policy comparison on a campus-shaped synthetic trace — the
+paper's core shared-cluster-efficiency claim (fair-share / gang / backfill /
+quota / preemption over Slurm, §3.1 Scheduling Layer).
 
-Workload: heavy-tailed job widths (mostly narrow, some pod-scale), Poisson
-arrivals at a load factor that produces queueing, three tenants with 2:1:1
-weights. Reported per policy: makespan, mean/p95 JCT, mean wait, cluster
-utilization, preemptions, restarts (failures + straggler drains injected).
+Workload comes from the trace layer (``repro.data.trace``): heavy-tailed job
+widths (mostly narrow, some pod-scale), Poisson arrivals at a load factor
+that produces queueing — optionally diurnally modulated (``--diurnal``) —
+three tenants with 2:1:1 weights, plus injected node failures and straggler
+slowdowns. Reported per policy: makespan, mean/p95 JCT, mean wait, cluster
+utilization, preemptions, restarts and simulator wall time.
+
+The default engine is the O(events) discrete-event simulator; pass
+``--legacy-tick`` for the O(horizon/tick) fixed-step engine (parity oracle).
+Each invocation writes a ``BENCH_scheduler.json`` snapshot next to the repo
+root so later PRs can track the perf trajectory.
 """
 from __future__ import annotations
 
-import random
+import argparse
+import json
+import os
+import tempfile
+import time
 from typing import Dict, List, Tuple
 
-from repro.core import (Cluster, ClusterSim, Job, ResourceSpec, RuntimeEnv,
-                        SimConfig, SimEvent, TaskSpec, make_policy)
+from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.data.trace import TraceConfig, synthesize
 
-WIDTHS = [4, 4, 8, 8, 8, 16, 16, 32, 64, 128, 256]
-
-
-def synth_trace(compiler: TaskCompiler, n_jobs: int, seed: int,
-                mean_gap: float = 18.0) -> List[Job]:
-    rng = random.Random(seed)
-    jobs, t = [], 0.0
-    for i in range(n_jobs):
-        t += rng.expovariate(1.0 / mean_gap)
-        chips = rng.choice(WIDTHS)
-        steps = rng.randint(60, 600)
-        tenant = rng.choices(["lab-a", "lab-b", "lab-c"], [2, 1, 1])[0]
-        spec = TaskSpec(
-            name=f"j{i}", tenant=tenant,
-            resources=ResourceSpec(
-                chips=chips,
-                min_chips=chips // 2 if rng.random() < 0.4 else 0,
-                priority=5 if rng.random() < 0.1 else 0),
-            runtime=RuntimeEnv(backend="shell"),
-            entry={"work_per_step": chips * 0.9, "comm_frac": 0.06},
-            total_steps=steps,
-            estimated_duration_s=steps * 0.9 * rng.uniform(0.9, 1.4))
-        jobs.append(Job(id=f"j{i}", plan=compiler.compile(spec),
-                        submit_time=t))
-    return jobs
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "BENCH_scheduler.json")
 
 
-def inject_ops(sim: ClusterSim, seed: int, horizon: float = 4000.0) -> None:
-    rng = random.Random(seed * 77 + 5)
-    nodes = list(sim.cluster.nodes)
-    for _ in range(4):                       # node failures
-        n = rng.choice(nodes)
-        t = rng.uniform(200, horizon)
-        sim.inject(SimEvent(t, "fail_node", n))
-        sim.inject(SimEvent(t + rng.uniform(120, 600), "recover_node", n))
-    for _ in range(4):                       # stragglers
-        n = rng.choice(nodes)
-        t = rng.uniform(200, horizon)
-        sim.inject(SimEvent(t, "set_speed", n, rng.uniform(0.15, 0.5)))
-        sim.inject(SimEvent(t + rng.uniform(200, 800), "set_speed", n, 1.0))
-
-
-def run_policy(policy: str, n_jobs: int = 60, seeds=(0, 1, 2)) -> Dict:
+def run_policy(policy: str, n_jobs: int = 60, seeds=(0, 1, 2),
+               engine: str = "event", diurnal: float = 0.0) -> Dict:
     agg: Dict[str, float] = {}
-    import tempfile
+    wall = 0.0
     for seed in seeds:
         with tempfile.TemporaryDirectory() as td:
             compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
@@ -71,28 +45,67 @@ def run_policy(policy: str, n_jobs: int = 60, seeds=(0, 1, 2)) -> Dict:
                                               "lab-c": 1})
             sim = ClusterSim(cluster, pol, SimConfig(
                 tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
-                restart_cost_s=15))
-            for job in synth_trace(compiler, n_jobs, seed):
-                sim.submit(job)
-            inject_ops(sim, seed)
+                restart_cost_s=15, engine=engine))
+            trace = synthesize(
+                TraceConfig(n_jobs=n_jobs, seed=seed,
+                            diurnal_amplitude=diurnal),
+                list(cluster.nodes))
+            trace.install(sim, compiler)
+            t0 = time.perf_counter()
             m = sim.run()
+            wall += time.perf_counter() - t0
             for k, v in m.items():
                 agg[k] = agg.get(k, 0.0) + v / len(seeds)
+    agg["wall_s"] = wall
     return agg
 
 
-def main(policies=("fifo", "backfill", "fair", "priority", "goodput")):
+def main(argv: List[str] = None) -> List[Tuple[str, Dict]]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--legacy-tick", action="store_true",
+                    help="use the fixed-tick engine (parity oracle)")
+    ap.add_argument("--jobs", type=int, default=60)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--diurnal", type=float, default=0.0,
+                    help="diurnal arrival-rate amplitude in [0, 1]")
+    ap.add_argument("--policies",
+                    default="fifo,backfill,fair,priority,goodput")
+    ap.add_argument("--out", default=None,
+                    help="where to write the JSON snapshot ('' disables; "
+                         "default: BENCH_scheduler.json, but legacy-tick "
+                         "runs don't overwrite the tracked snapshot)")
+    args = ap.parse_args(argv)
+    engine = "tick" if args.legacy_tick else "event"
+    if args.out is None:
+        args.out = DEFAULT_OUT if engine == "event" else ""
+    seeds = tuple(range(args.seeds))
+
     rows = []
+    print(f"engine={engine}")
     print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
           f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
-          f"{'preempt':>8s} {'restarts':>8s}")
-    for pol in policies:
-        m = run_policy(pol)
+          f"{'preempt':>8s} {'restarts':>8s} {'wall_s':>8s}")
+    for pol in args.policies.split(","):
+        m = run_policy(pol, n_jobs=args.jobs, seeds=seeds, engine=engine,
+                       diurnal=args.diurnal)
         rows.append((pol, m))
         print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
               f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
               f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
-              f"{m['restarts']:8.1f}")
+              f"{m['restarts']:8.1f} {m['wall_s']:8.3f}")
+    if args.out:
+        snapshot = {
+            "bench": "bench_scheduler",
+            "engine": engine,
+            "n_jobs": args.jobs,
+            "seeds": list(seeds),
+            "diurnal_amplitude": args.diurnal,
+            "total_wall_s": sum(m["wall_s"] for _, m in rows),
+            "results": {pol: m for pol, m in rows},
+        }
+        with open(args.out, "w") as f:
+            json.dump(snapshot, f, indent=1, sort_keys=True)
+        print(f"snapshot -> {os.path.normpath(args.out)}")
     return rows
 
 

@@ -134,15 +134,18 @@ class Cluster:
     def job_nodes(self, job_id: str) -> List[str]:
         return [nid for nid, _ in self.allocations.get(job_id, [])]
 
+    def jobs_on_node(self, node_id: str) -> List[str]:
+        """Job ids with at least one chip allocated on ``node_id``."""
+        return [jid for jid, alloc in self.allocations.items()
+                if any(nid == node_id for nid, _ in alloc)]
+
     # -- failures / stragglers ------------------------------------------------
 
     def fail_node(self, node_id: str) -> List[str]:
         """Marks a node dead. Returns job ids that were running on it."""
         node = self.nodes[node_id]
         node.healthy = False
-        victims = [jid for jid, alloc in self.allocations.items()
-                   if any(nid == node_id for nid, _ in alloc)]
-        return victims
+        return self.jobs_on_node(node_id)
 
     def recover_node(self, node_id: str) -> None:
         n = self.nodes[node_id]

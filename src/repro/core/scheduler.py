@@ -16,7 +16,12 @@ checkpoint-based preemption of the Execution Layer:
                         assigned by greedy marginal-goodput, jobs resize live
 
 Policies return Actions; the driver (sim or real executor) applies them, so a
-policy never mutates cluster state directly.
+policy never mutates cluster state directly. Drivers are not tick-based:
+``account`` receives the elapsed virtual time since the previous scheduling
+instant (any dt, not a fixed cadence), and a policy that wants to be invoked
+on a timer even when no job state changes advertises it via
+``wakeup_interval()`` (the event-driven simulator turns that into periodic
+wake-up events — how ``GoodputElastic.rebalance_every`` keeps firing).
 """
 from __future__ import annotations
 
@@ -142,12 +147,18 @@ class Policy:
         self.weights = tenant_weights or {}
         self.usage: Dict[str, float] = {}     # decayed chip-seconds / tenant
 
-    # bookkeeping called by the driver every tick
+    # bookkeeping called by the driver with the virtual time elapsed since
+    # the last scheduling instant (dt is arbitrary, not a fixed tick)
     def account(self, dt: float, running: List[Job], decay: float = 0.999):
         for t in self.usage:
             self.usage[t] *= decay ** dt
         for j in running:
             self.usage[j.tenant] = self.usage.get(j.tenant, 0.0) + j.chips * dt
+
+    def wakeup_interval(self) -> Optional[float]:
+        """Seconds between periodic invocations the policy wants even when no
+        job/cluster state changes; None = event-driven invocation only."""
+        return None
 
     def _quota_ok(self, job: Job, running: List[Job], chips: int) -> bool:
         q = self.quotas.get(job.tenant)
@@ -265,7 +276,9 @@ class PriorityPreempt(Policy):
                 (j for j in running
                  if j.priority < job.priority and j.id not in preempted
                  and j.spec.resources.preemptible),
-                key=lambda j: (j.priority, -j.start_time if j.start_time else 0))
+                key=lambda j: (j.priority,
+                               -j.start_time if j.start_time is not None
+                               else 0.0))
             gain = free
             chosen = []
             for v in victims:
@@ -293,9 +306,37 @@ class GoodputElastic(Policy):
         self.rebalance_every = rebalance_every
         self._last = -1e9
 
+    def wakeup_interval(self):
+        return self.rebalance_every
+
+    def _admit_only(self, pending, running, cluster):
+        """Between rebalances: start new arrivals into *free* capacity only.
+        Resizes/preemptions of running jobs wait for the cadence, so a
+        checkpoint-resize storm can't happen on every scheduling instant."""
+        actions: List[Action] = []
+        free = cluster.free_chips()
+        granted: Dict[str, int] = {}          # tenant -> chips this round
+        for j in sorted(pending, key=lambda j: j.submit_time):
+            need = j.min_chips if j.elastic else j.requested
+            if not 0 < need <= free:
+                continue
+            grant = min(free, j.requested) if j.elastic else j.requested
+            q = self.quotas.get(j.tenant)
+            if q is not None:
+                used = sum(r.chips for r in running
+                           if r.tenant == j.tenant) + granted.get(j.tenant, 0)
+                if j.elastic:                 # shrink into quota headroom
+                    grant = min(grant, q - used)
+                if grant < need or used + grant > q:
+                    continue
+            actions.append(Start(j.id, grant))
+            granted[j.tenant] = granted.get(j.tenant, 0) + grant
+            free -= grant
+        return actions
+
     def schedule(self, now, pending, running, cluster):
-        if now - self._last < self.rebalance_every and not pending:
-            return []
+        if now - self._last < self.rebalance_every:
+            return self._admit_only(pending, running, cluster)
         self._last = now
         jobs = [j for j in running + pending
                 if j.state in (JobState.RUNNING, JobState.PENDING)]

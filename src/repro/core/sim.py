@@ -6,10 +6,37 @@ node-failure restart from the last checkpoint, straggler detection +
 drain/reallocate, elastic resizes. Used by the scheduler benchmarks (the
 paper's shared-cluster-efficiency claims) and by the property tests.
 
+Two engines share the same workload API, action application and metrics:
+
+``event`` (default)
+    A true discrete-event engine: one heap-ordered queue holds arrivals,
+    injected operational events (failures / recoveries / speed changes),
+    checkpoint starts, pause expirations and *predicted* job completions.
+    Virtual time jumps straight to the next event, so cost is O(events)
+    instead of O(horizon / tick) — multi-day diurnal traces simulate in
+    milliseconds. Job progress is accrued lazily from a per-job rate
+    (``steps_per_s * node speed``); whenever a job's chip count, placement,
+    node speed or pause state changes the accrued progress is settled and
+    its pending completion/checkpoint events are invalidated via a per-job
+    generation counter and re-predicted. The policy runs only at
+    state-changing instants (arrival, completion, failure, recovery,
+    straggler drain) plus an optional periodic wake-up advertised by
+    ``Policy.wakeup_interval()`` (how ``GoodputElastic.rebalance_every``
+    keeps firing without a tick clock).
+
+``tick`` (legacy)
+    The original fixed-step loop (``SimConfig.tick`` seconds per step),
+    kept as a parity oracle — the benchmarks expose it via
+    ``--legacy-tick`` and tests assert both engines agree on a seeded
+    trace. Driving :meth:`ClusterSim.step` directly always uses this
+    engine regardless of ``SimConfig.engine``.
+
 Virtual time; nothing here touches JAX.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
@@ -22,7 +49,7 @@ from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
 
 @dataclass
 class SimConfig:
-    tick: float = 1.0
+    tick: float = 1.0                     # legacy engine step size
     checkpoint_interval_s: float = 30.0
     checkpoint_cost_s: float = 2.0        # pause while snapshotting
     restart_cost_s: float = 10.0          # provisioning + restore
@@ -30,6 +57,7 @@ class SimConfig:
     straggler_threshold: float = 0.75
     seed: int = 0
     max_time: float = 200000.0
+    engine: str = "event"                 # "event" | "tick"
 
 
 @dataclass
@@ -38,6 +66,15 @@ class SimEvent:
     kind: str                      # fail_node | recover_node | set_speed
     node: str
     value: float = 0.0
+
+
+@dataclass
+class _JobClock:
+    """Event-engine runtime record for one running job."""
+    rate: float = 0.0              # steps/s at current chips/speed; 0 = paused
+    accrue_from: float = 0.0       # progress settled up to this instant
+    next_ckpt: float = float("inf")
+    pause_until: float = 0.0
 
 
 class ClusterSim:
@@ -53,6 +90,14 @@ class ClusterSim:
         self._arrivals: List[Tuple[float, Job]] = []
         self._pause_until: Dict[str, float] = {}
         self._last_ckpt: Dict[str, float] = {}
+        # event-engine state
+        self._clock: Dict[str, _JobClock] = {}
+        self._gen: Dict[str, int] = {}        # per-job event generation
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+        self._acct_t = 0.0
+        self._n_external = 0                  # arrivals+injects still queued
+        self._event_mode = False
 
     # -- workload ------------------------------------------------------------
 
@@ -92,9 +137,19 @@ class ClusterSim:
             self.cfg.restart_cost_s if job.restarts or job.preemptions else 0.0)
         self._last_ckpt[job.id] = self.now
         self._log(job, f"start chips={chips} pods={self.cluster.job_pods(job.id)}")
+        if self._event_mode:
+            self._clock[job.id] = _JobClock(
+                accrue_from=self.now,
+                next_ckpt=self.now + self.cfg.checkpoint_interval_s,
+                pause_until=self._pause_until[job.id])
+            self._resched(job)
 
     def _stop(self, job: Job, state: JobState, *, checkpoint: bool,
               reason: str = "") -> None:
+        if self._event_mode:
+            self._settle(job)
+            self._clock.pop(job.id, None)
+            self._gen[job.id] = self._gen.get(job.id, 0) + 1
         if checkpoint:
             job.ckpt_progress = job.progress
         else:
@@ -120,6 +175,8 @@ class ClusterSim:
                 job = self.jobs[a.job_id]
                 if job.state == JobState.RUNNING and a.chips != job.chips:
                     # checkpoint-resize-resume
+                    if self._event_mode:
+                        self._settle(job)
                     job.ckpt_progress = job.progress
                     self.cluster.release(job.id)
                     alloc = self.cluster.try_allocate(
@@ -131,14 +188,62 @@ class ClusterSim:
                         if alloc is None:
                             job.state = JobState.PENDING
                             job.chips = 0
+                            if self._event_mode:
+                                self._clock.pop(job.id, None)
+                                self._gen[job.id] = \
+                                    self._gen.get(job.id, 0) + 1
+                        elif self._event_mode:
+                            self._resched(job)
                         continue
                     self._log(job, f"resize {job.chips} -> {a.chips}")
                     job.chips = a.chips
                     self._pause_until[job.id] = self.now + self.cfg.restart_cost_s
+                    if self._event_mode:
+                        self._clock[job.id].pause_until = \
+                            self._pause_until[job.id]
+                        self._resched(job)
 
-    # -- main loop -----------------------------------------------------------
+    def _straggler_sweep(self) -> bool:
+        """Drain + checkpoint-requeue jobs gated on slow nodes. True if any."""
+        hit = False
+        for job in self._running():
+            slow = self.cluster.straggler_nodes(
+                job.id, self.cfg.straggler_threshold)
+            if slow:
+                for nid in slow:
+                    self.cluster.drain(nid)
+                job.restarts += 1
+                self._stop(job, JobState.PENDING, checkpoint=True,
+                           reason=f"straggler-drain({','.join(slow)})")
+                hit = True
+        return hit
+
+    def _apply_injected(self, ev: SimEvent) -> None:
+        if ev.kind == "fail_node":
+            victims = self.cluster.fail_node(ev.node)
+            for jid in victims:
+                job = self.jobs[jid]
+                job.restarts += 1
+                self._stop(job, JobState.PENDING, checkpoint=False,
+                           reason=f"node-failure({ev.node})")
+        elif ev.kind == "recover_node":
+            self.cluster.recover_node(ev.node)
+        elif ev.kind == "set_speed":
+            self.cluster.set_speed(ev.node, ev.value)
+            if ev.value >= 0.99:                  # recovered: undrain
+                self.cluster.drain(ev.node, False)
+            if self._event_mode:
+                # running jobs gated on this node change rate: re-predict
+                for jid in self.cluster.jobs_on_node(ev.node):
+                    job = self.jobs.get(jid)
+                    if job is not None and job.state == JobState.RUNNING:
+                        self._settle(job)
+                        self._resched(job)
+
+    # -- legacy tick engine ---------------------------------------------------
 
     def step(self) -> None:
+        """One fixed tick of the legacy engine (parity oracle)."""
         dt = self.cfg.tick
         # arrivals
         while self._arrivals and self._arrivals[0][0] <= self.now:
@@ -147,31 +252,10 @@ class ClusterSim:
             self._log(job, "submitted")
         # injected events
         while self.pending_events and self.pending_events[0].time <= self.now:
-            ev = self.pending_events.pop(0)
-            if ev.kind == "fail_node":
-                victims = self.cluster.fail_node(ev.node)
-                for jid in victims:
-                    job = self.jobs[jid]
-                    job.restarts += 1
-                    self._stop(job, JobState.PENDING, checkpoint=False,
-                               reason=f"node-failure({ev.node})")
-            elif ev.kind == "recover_node":
-                self.cluster.recover_node(ev.node)
-            elif ev.kind == "set_speed":
-                self.cluster.set_speed(ev.node, ev.value)
-                if ev.value >= 0.99:                  # recovered: undrain
-                    self.cluster.drain(ev.node, False)
+            self._apply_injected(self.pending_events.pop(0))
         # straggler mitigation: drain + checkpoint-restart without the node
         if self.cfg.straggler_mitigation:
-            for job in self._running():
-                slow = self.cluster.straggler_nodes(
-                    job.id, self.cfg.straggler_threshold)
-                if slow:
-                    for nid in slow:
-                        self.cluster.drain(nid)
-                    job.restarts += 1
-                    self._stop(job, JobState.PENDING, checkpoint=True,
-                               reason=f"straggler-drain({','.join(slow)})")
+            self._straggler_sweep()
         # progress
         for job in self._running():
             if self.now < self._pause_until.get(job.id, 0.0):
@@ -196,8 +280,152 @@ class ClusterSim:
         self._apply(actions)
         self.now += dt
 
+    # -- event engine ----------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), kind, payload))
+
+    def _settle(self, job: Job) -> None:
+        """Accrue progress for a running job up to ``now``."""
+        clk = self._clock.get(job.id)
+        if clk is None:
+            return
+        dt = self.now - clk.accrue_from
+        if dt > 0 and clk.rate > 0:
+            job.progress = min(float(job.total_steps),
+                               job.progress + dt * clk.rate)
+        clk.accrue_from = self.now
+
+    def _resched(self, job: Job) -> None:
+        """Re-predict the job's next intrinsic event (progress settled)."""
+        clk = self._clock[job.id]
+        gen = self._gen[job.id] = self._gen.get(job.id, 0) + 1
+        if self.now < clk.pause_until:
+            clk.rate = 0.0
+            self._push(clk.pause_until, "pause_end", (job.id, gen))
+            return
+        clk.rate = job.steps_per_s(job.chips,
+                                   self.cluster.crosses_pods(job.id)) \
+            * self.cluster.job_speed(job.id)
+        t_ckpt = max(clk.next_ckpt, self.now)
+        if clk.rate > 0:
+            t_done = self.now + \
+                max(0.0, job.total_steps - job.progress) / clk.rate
+            if t_done <= t_ckpt:
+                self._push(t_done, "complete", (job.id, gen))
+                return
+        self._push(t_ckpt, "ckpt_start", (job.id, gen))
+
+    def _fresh(self, payload) -> Optional[Job]:
+        jid, gen = payload
+        job = self.jobs.get(jid)
+        if job is None or job.state != JobState.RUNNING:
+            return None
+        if gen != self._gen.get(jid):
+            return None
+        return job
+
+    def _handle(self, kind: str, payload) -> bool:
+        """Process one event; returns True if the policy should run."""
+        if kind == "arrival":
+            job = payload
+            self.jobs[job.id] = job
+            self._log(job, "submitted")
+            self._n_external -= 1
+            return True
+        if kind == "inject":
+            self._apply_injected(payload)
+            self._n_external -= 1
+            return True
+        if kind == "wakeup":
+            live = any(j.state in (JobState.PENDING, JobState.RUNNING)
+                       for j in self.jobs.values())
+            if live or self._n_external > 0:
+                self._push(self.now + payload, "wakeup", payload)
+            return True
+        if kind == "ckpt_start":
+            job = self._fresh(payload)
+            if job is None:
+                return False
+            self._settle(job)
+            clk = self._clock[job.id]
+            job.ckpt_progress = job.progress
+            self._last_ckpt[job.id] = self.now
+            clk.next_ckpt = self.now + self.cfg.checkpoint_interval_s
+            clk.pause_until = self.now + self.cfg.checkpoint_cost_s
+            self._pause_until[job.id] = clk.pause_until
+            self._resched(job)
+            return False
+        if kind == "pause_end":
+            job = self._fresh(payload)
+            if job is None:
+                return False
+            self._settle(job)
+            self._resched(job)
+            return False
+        if kind == "complete":
+            job = self._fresh(payload)
+            if job is None:
+                return False
+            self._settle(job)
+            job.progress = float(job.total_steps)
+            job.end_time = self.now
+            self._stop(job, JobState.COMPLETED, checkpoint=True)
+            return True
+        raise ValueError(kind)
+
+    def _schedule_now(self) -> None:
+        if self.cfg.straggler_mitigation:
+            self._straggler_sweep()
+        dt = self.now - self._acct_t
+        self._acct_t = self.now
+        self.policy.account(dt, self._running())
+        self._apply(self.policy.schedule(self.now, self._pending(),
+                                         self._running(), self.cluster))
+        # a fresh allocation may have landed on a slow node; requeue it now
+        # (the tick engine would catch this on its next step)
+        if self.cfg.straggler_mitigation and self._straggler_sweep():
+            self._apply(self.policy.schedule(self.now, self._pending(),
+                                             self._running(), self.cluster))
+
+    def _run_events(self, until: float) -> Dict[str, float]:
+        self._event_mode = True
+        self._acct_t = self.now
+        for t, job in self._arrivals:
+            self._push(t, "arrival", job)
+            self._n_external += 1
+        self._arrivals = []
+        for ev in self.pending_events:
+            self._push(ev.time, "inject", ev)
+            self._n_external += 1
+        self.pending_events = []
+        wake = self.policy.wakeup_interval()
+        if wake:
+            self._push(self.now + wake, "wakeup", wake)
+        self._schedule_now()            # jobs registered before run()
+        while self._heap:
+            t = self._heap[0][0]
+            if t > until:
+                self.now = until
+                break
+            self.now = t
+            need_sched = False
+            while self._heap and self._heap[0][0] <= t:
+                _, _, kind, payload = heapq.heappop(self._heap)
+                need_sched |= self._handle(kind, payload)
+            if need_sched:
+                self._schedule_now()
+            if self._all_done() and self._n_external == 0:
+                break
+        self._event_mode = False
+        return self.metrics()
+
+    # -- main loop -----------------------------------------------------------
+
     def run(self, until: Optional[float] = None) -> Dict[str, float]:
         until = until if until is not None else self.cfg.max_time
+        if self.cfg.engine == "event":
+            return self._run_events(until)
         while self.now < until:
             self.step()
             if self._all_done() and not self.pending_events:

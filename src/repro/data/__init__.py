@@ -1,1 +1,2 @@
 from repro.data.synthetic import SyntheticLM, input_specs
+from repro.data.trace import Trace, TraceConfig, TraceJob, synthesize

@@ -1,0 +1,229 @@
+"""Trace-driven campus workload layer for the cluster simulator.
+
+The scheduler benchmarks reproduce the paper's shared-cluster claims by
+replaying *traces*: a serializable bundle of job arrivals plus operational
+events (node failures, recoveries, straggler slowdowns). A trace is either
+synthesized from :class:`TraceConfig` — paper-shaped campus workloads with
+diurnal Poisson arrivals, heavy-tailed job widths, a weighted tenant mix,
+elastic/priority fractions and configurable failure/straggler processes
+(including correlated rack failures that take out a contiguous host group)
+— or hand-built from explicit :class:`TraceJob` rows, and can be saved to /
+loaded from JSON so a policy comparison replays byte-identical workloads
+across engines, seeds and future PRs.
+
+Trace JSON format (``Trace.to_dict``)::
+
+    {"format": 1,
+     "meta":   {...TraceConfig echo or free-form...},
+     "jobs":   [{id, submit_time, chips, total_steps, tenant, min_chips,
+                 priority, preemptible, work_per_step, comm_frac,
+                 estimated_duration_s}, ...],
+     "events": [{time, kind, node, value}, ...]}
+
+``Trace.install(sim, compiler)`` compiles each row into a TaskSpec ->
+ExecutionPlan -> Job and submits it together with the injected events, so
+the same trace drives either simulator engine (event or legacy tick).
+
+Virtual-time only; nothing here touches JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.schema import ResourceSpec, RuntimeEnv, TaskSpec
+from repro.core.scheduler import Job
+from repro.core.sim import SimEvent
+
+TRACE_FORMAT = 1
+
+
+@dataclass
+class TraceJob:
+    """One job row of a workload trace (pure data, compiler-independent)."""
+    id: str
+    submit_time: float
+    chips: int
+    total_steps: int
+    tenant: str = "default"
+    min_chips: int = 0                # >0 and < chips => elastic
+    priority: int = 0
+    preemptible: bool = True
+    work_per_step: float = 1.0        # per-step chip-seconds of compute
+    comm_frac: float = 0.05
+    estimated_duration_s: float = 0.0
+
+    def to_spec(self) -> TaskSpec:
+        return TaskSpec(
+            name=self.id, tenant=self.tenant,
+            resources=ResourceSpec(chips=self.chips, min_chips=self.min_chips,
+                                   priority=self.priority,
+                                   preemptible=self.preemptible),
+            runtime=RuntimeEnv(backend="shell"),
+            entry={"work_per_step": self.work_per_step,
+                   "comm_frac": self.comm_frac},
+            total_steps=self.total_steps,
+            estimated_duration_s=self.estimated_duration_s
+            or float(self.total_steps))
+
+
+@dataclass
+class TraceConfig:
+    """Knobs for :func:`synthesize` (paper-shaped campus workload)."""
+    n_jobs: int = 60
+    seed: int = 0
+    # arrivals: Poisson at rate 1/mean_gap_s, optionally modulated by a
+    # sinusoidal diurnal factor 1 + A*sin(2*pi*t/period) (thinning sampler)
+    mean_gap_s: float = 18.0
+    diurnal_amplitude: float = 0.0    # 0 = homogeneous Poisson
+    diurnal_period_s: float = 86400.0
+    # widths: sampled from `widths`; with width_alpha set, P(w) ~ w^-alpha
+    # over the distinct widths (heavy tail), else uniform over the list
+    widths: Tuple[int, ...] = (4, 4, 8, 8, 8, 16, 16, 32, 64, 128, 256)
+    width_alpha: Optional[float] = None
+    steps_min: int = 60
+    steps_max: int = 600
+    tenants: Tuple[Tuple[str, float], ...] = (("lab-a", 2.0), ("lab-b", 1.0),
+                                              ("lab-c", 1.0))
+    elastic_frac: float = 0.4         # fraction of jobs that may run shrunk
+    priority_frac: float = 0.1        # fraction submitted as high priority
+    high_priority: int = 5
+    work_per_chip: float = 0.9        # work_per_step = chips * work_per_chip
+    comm_frac: float = 0.06
+    est_noise: Tuple[float, float] = (0.9, 1.4)   # runtime-estimate error
+    # operational events over [ops_start, ops_start + ops_window]
+    n_failures: int = 4
+    rack_failure_frac: float = 0.0    # fraction of failures hitting a rack
+    rack_size: int = 4                # contiguous hosts per correlated failure
+    recover_s: Tuple[float, float] = (120.0, 600.0)
+    n_stragglers: int = 4
+    slow_factor: Tuple[float, float] = (0.15, 0.5)
+    slow_duration_s: Tuple[float, float] = (200.0, 800.0)
+    ops_start: float = 200.0
+    ops_window: float = 3800.0
+
+
+@dataclass
+class Trace:
+    jobs: List[TraceJob]
+    events: List[SimEvent] = field(default_factory=list)
+    meta: Dict = field(default_factory=dict)
+
+    # -- replay --------------------------------------------------------------
+
+    def materialize(self, compiler) -> List[Job]:
+        return [Job(id=tj.id, plan=compiler.compile(tj.to_spec()),
+                    submit_time=tj.submit_time) for tj in self.jobs]
+
+    def install(self, sim, compiler) -> None:
+        """Submit every job and inject every event into a ClusterSim."""
+        for job in self.materialize(compiler):
+            sim.submit(job)
+        for ev in self.events:
+            sim.inject(SimEvent(ev.time, ev.kind, ev.node, ev.value))
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_dict(self) -> Dict:
+        # round-trip meta through JSON so tuples normalize to lists and
+        # to_dict() compares equal before and after save/load
+        return {"format": TRACE_FORMAT,
+                "meta": json.loads(json.dumps(self.meta)),
+                "jobs": [dataclasses.asdict(j) for j in self.jobs],
+                "events": [dataclasses.asdict(e) for e in self.events]}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Trace":
+        if d.get("format") != TRACE_FORMAT:
+            raise ValueError(f"unsupported trace format {d.get('format')!r}")
+        return cls(jobs=[TraceJob(**j) for j in d["jobs"]],
+                   events=[SimEvent(**e) for e in d["events"]],
+                   meta=d.get("meta", {}))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Synthesis
+# ---------------------------------------------------------------------------
+
+def _arrival_times(cfg: TraceConfig, rng: random.Random) -> List[float]:
+    """(In)homogeneous Poisson arrivals via thinning."""
+    rate = 1.0 / cfg.mean_gap_s
+    amp = max(0.0, min(cfg.diurnal_amplitude, 1.0))
+    lam_max = rate * (1.0 + amp)
+    times, t = [], 0.0
+    while len(times) < cfg.n_jobs:
+        t += rng.expovariate(lam_max)
+        lam_t = rate * (1.0 + amp * math.sin(2.0 * math.pi * t
+                                             / cfg.diurnal_period_s))
+        if rng.random() * lam_max <= lam_t:
+            times.append(t)
+    return times
+
+
+def _sample_width(cfg: TraceConfig, rng: random.Random) -> int:
+    if cfg.width_alpha is None:
+        return rng.choice(cfg.widths)
+    distinct = sorted(set(cfg.widths))
+    weights = [w ** -cfg.width_alpha for w in distinct]
+    return rng.choices(distinct, weights)[0]
+
+
+def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
+    """Generate a campus-shaped trace. ``nodes`` (cluster node ids, in rack
+    order) is required when the config injects failures or stragglers."""
+    rng = random.Random(cfg.seed)
+    tenant_names = [t for t, _ in cfg.tenants]
+    tenant_weights = [w for _, w in cfg.tenants]
+    jobs: List[TraceJob] = []
+    for i, t in enumerate(_arrival_times(cfg, rng)):
+        chips = _sample_width(cfg, rng)
+        steps = rng.randint(cfg.steps_min, cfg.steps_max)
+        jobs.append(TraceJob(
+            id=f"j{i}", submit_time=t, chips=chips, total_steps=steps,
+            tenant=rng.choices(tenant_names, tenant_weights)[0],
+            min_chips=chips // 2 if rng.random() < cfg.elastic_frac else 0,
+            priority=cfg.high_priority
+            if rng.random() < cfg.priority_frac else 0,
+            work_per_step=chips * cfg.work_per_chip,
+            comm_frac=cfg.comm_frac,
+            estimated_duration_s=steps * cfg.work_per_chip
+            * rng.uniform(*cfg.est_noise)))
+
+    events: List[SimEvent] = []
+    nodes = list(nodes)
+    if (cfg.n_failures or cfg.n_stragglers) and not nodes:
+        raise ValueError("node ids are required to synthesize ops events")
+    for _ in range(cfg.n_failures):
+        t = rng.uniform(cfg.ops_start, cfg.ops_start + cfg.ops_window)
+        back = t + rng.uniform(*cfg.recover_s)
+        if rng.random() < cfg.rack_failure_frac:
+            # correlated rack failure: a contiguous host group goes together
+            lo = rng.randrange(0, max(1, len(nodes) - cfg.rack_size + 1))
+            group = nodes[lo:lo + cfg.rack_size]
+        else:
+            group = [rng.choice(nodes)]
+        for n in group:
+            events.append(SimEvent(t, "fail_node", n))
+            events.append(SimEvent(back, "recover_node", n))
+    for _ in range(cfg.n_stragglers):
+        n = rng.choice(nodes)
+        t = rng.uniform(cfg.ops_start, cfg.ops_start + cfg.ops_window)
+        events.append(SimEvent(t, "set_speed", n, rng.uniform(*cfg.slow_factor)))
+        events.append(SimEvent(t + rng.uniform(*cfg.slow_duration_s),
+                               "set_speed", n, 1.0))
+    events.sort(key=lambda e: e.time)
+    return Trace(jobs=jobs, events=events,
+                 meta={"config": dataclasses.asdict(cfg)})

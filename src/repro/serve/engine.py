@@ -126,8 +126,17 @@ class ServeEngine:
 
     def step(self) -> List[GenerationResult]:
         """One decode step for every occupied slot. Returns newly finished."""
+        occupied = np.asarray([s.request is not None for s in self._slots])
+        if not occupied.any():
+            return []
         tokens = jnp.asarray([s.last_token for s in self._slots], jnp.int32)
+        prev_lengths = self.cache["lengths"]
         logits, self.cache = self._decode(self.params, self.cache, tokens)
+        # the dense decode advances every row's length; freed slots must not
+        # keep walking (they would eventually run past max_seq and corrupt
+        # the position a future splice resumes from), so pin them in place
+        self.cache["lengths"] = jnp.where(jnp.asarray(occupied),
+                                          self.cache["lengths"], prev_lengths)
         logits = np.asarray(logits)
         finished = []
         self._steps += 1
@@ -139,11 +148,11 @@ class ServeEngine:
             s.last_token = nxt
             s.remaining -= 1
             hit_eos = self.eos_id is not None and nxt == self.eos_id
-            total = s.request and self.cache["lengths"][i]
             if s.remaining <= 0 or hit_eos:
                 s.request.done = True
                 finished.append(s.request)
                 self._slots[i] = _Slot()
+                self.cache["lengths"] = self.cache["lengths"].at[i].set(0)
         return finished
 
     def run(self, requests: List[List[int]], max_new: int = 16

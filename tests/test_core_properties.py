@@ -5,6 +5,8 @@ import string
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.ckpt.checkpoint import _from_skeleton, _to_skeleton

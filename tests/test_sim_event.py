@@ -1,0 +1,204 @@
+"""Event-driven simulator: parity with the legacy tick engine, trace
+serialization/replay determinism, and regressions for the scheduler bugfix
+sweep (goodput rebalance cadence, priority victim ordering, completion
+re-prediction on node speed changes)."""
+import pytest
+
+from repro.core import (Cluster, ClusterSim, Job, JobState, Preempt, Resize,
+                        ResourceSpec, RuntimeEnv, SimConfig, SimEvent, Start,
+                        TaskSpec, make_policy)
+from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.data.trace import Trace, TraceConfig, TraceJob, synthesize
+
+
+@pytest.fixture()
+def compiler(tmp_path):
+    return TaskCompiler(ArtifactStore(str(tmp_path / "cas")),
+                        str(tmp_path / "work"))
+
+
+def mkcompiler(root):
+    return TaskCompiler(ArtifactStore(str(root / "cas")), str(root / "work"))
+
+
+def mkjob(compiler, name, chips, steps=100, *, tenant="t", priority=0,
+          min_chips=0, submit=0.0, preemptible=True):
+    spec = TaskSpec(
+        name=name, tenant=tenant,
+        resources=ResourceSpec(chips=chips, min_chips=min_chips,
+                               priority=priority, preemptible=preemptible),
+        runtime=RuntimeEnv(backend="shell"),
+        entry={"work_per_step": chips * 0.9, "comm_frac": 0.05},
+        total_steps=steps, estimated_duration_s=steps)
+    return Job(id=name, plan=compiler.compile(spec), submit_time=submit)
+
+
+def small_cluster():
+    return Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)   # 32 chips
+
+
+def small_trace_cfg(seed=0):
+    return TraceConfig(n_jobs=14, seed=seed, mean_gap_s=30.0,
+                       widths=(4, 4, 8, 8, 16), steps_min=40, steps_max=200,
+                       elastic_frac=0.0, priority_frac=0.2,
+                       n_failures=1, n_stragglers=1,
+                       ops_start=100.0, ops_window=400.0,
+                       recover_s=(100.0, 200.0),
+                       slow_duration_s=(100.0, 200.0))
+
+
+# -- engine parity ------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["fifo", "priority"])
+def test_event_engine_matches_tick_engine(tmp_path, policy):
+    metrics = {}
+    for engine in ("tick", "event"):
+        comp = mkcompiler(tmp_path / engine)
+        c = small_cluster()
+        sim = ClusterSim(c, make_policy(policy), SimConfig(
+            tick=1.0, checkpoint_interval_s=20, checkpoint_cost_s=2,
+            restart_cost_s=10, engine=engine))
+        synthesize(small_trace_cfg(), list(c.nodes)).install(sim, comp)
+        metrics[engine] = sim.run()
+    mt, me = metrics["tick"], metrics["event"]
+    assert me["completed"] == mt["completed"]
+    assert me["preemptions"] == mt["preemptions"]
+    assert me["restarts"] == mt["restarts"]
+    assert me["avg_jct"] == pytest.approx(mt["avg_jct"], rel=0.1)
+    assert me["makespan"] == pytest.approx(mt["makespan"], rel=0.1)
+
+
+def test_completion_repredicted_on_speed_change(tmp_path):
+    """A node slowdown mid-run must stretch the predicted completion (event
+    invalidation + re-prediction) exactly as the tick engine observes it."""
+    ends = {}
+    for engine in ("tick", "event"):
+        comp = mkcompiler(tmp_path / engine)
+        c = small_cluster()
+        sim = ClusterSim(c, make_policy("fifo"), SimConfig(
+            engine=engine, straggler_mitigation=False,
+            checkpoint_interval_s=1e9))
+        sim.submit(mkjob(comp, "j", 16, 200, submit=0.0))
+        sim.inject(SimEvent(30.0, "set_speed", "pod0/host000", 0.5))
+        sim.inject(SimEvent(90.0, "set_speed", "pod0/host000", 1.0))
+        sim.run()
+        assert sim.jobs["j"].state == JobState.COMPLETED
+        ends[engine] = sim.jobs["j"].end_time
+    assert ends["event"] == pytest.approx(ends["tick"], abs=2.0)
+    # the 60 s half-speed window costs ~30 s vs an unslowed run
+    unslowed = 200 / mkjob(mkcompiler(tmp_path / "x"), "x", 16,
+                           200).steps_per_s(16)
+    assert ends["event"] > unslowed + 20
+
+
+def test_event_engine_goodput_wakeup_resizes(compiler):
+    """Without a tick clock, GoodputElastic still rebalances on its cadence
+    via the wakeup_interval() hint: a late job forces the solo job to shrink."""
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("goodput", rebalance_every=10),
+                     SimConfig(engine="event"))
+    sim.submit(mkjob(compiler, "solo", 32, 300, min_chips=8, submit=0.0))
+    sim.submit(mkjob(compiler, "late", 16, 80, min_chips=8, submit=50.0))
+    sim.run()
+    assert sim.jobs["solo"].state == JobState.COMPLETED
+    assert sim.jobs["late"].state == JobState.COMPLETED
+    assert any("resize" in msg for _, msg in sim.jobs["solo"].events)
+
+
+# -- trace layer --------------------------------------------------------------
+
+def test_trace_roundtrip(tmp_path):
+    c = small_cluster()
+    tr = synthesize(TraceConfig(n_jobs=8, seed=3, n_failures=2,
+                                rack_failure_frac=0.5, rack_size=2,
+                                n_stragglers=1, diurnal_amplitude=0.6,
+                                diurnal_period_s=3600.0, width_alpha=1.2),
+                    list(c.nodes))
+    path = str(tmp_path / "trace.json")
+    tr.save(path)
+    back = Trace.load(path)
+    assert back.to_dict() == tr.to_dict()
+    assert len(back.jobs) == 8
+    assert back.events        # failures + stragglers survived the roundtrip
+
+
+def test_trace_replay_is_deterministic(tmp_path):
+    runs = []
+    for i in range(2):
+        comp = mkcompiler(tmp_path / str(i))
+        c = small_cluster()
+        sim = ClusterSim(c, make_policy("fair"), SimConfig(engine="event"))
+        synthesize(small_trace_cfg(seed=7), list(c.nodes)).install(sim, comp)
+        runs.append(sim.run())
+    assert runs[0] == runs[1]
+
+
+def test_trace_rejects_unknown_format():
+    with pytest.raises(ValueError):
+        Trace.from_dict({"format": 999, "jobs": [], "events": []})
+
+
+# -- bugfix regressions -------------------------------------------------------
+
+def test_goodput_resize_respects_cadence(compiler):
+    """Pending arrivals between rebalances must not trigger checkpoint-resizes
+    (the pre-fix policy rebalanced on every call whenever pending != [])."""
+    c = small_cluster()
+    pol = make_policy("goodput", rebalance_every=30)
+    big = mkjob(compiler, "big", 32, 400, min_chips=8)
+    acts = pol.schedule(0.0, [big], [], c)
+    assert any(isinstance(a, Start) for a in acts)
+    c.try_allocate("big", 32)
+    big.state, big.chips, big.start_time = JobState.RUNNING, 32, 0.0
+    late = mkjob(compiler, "late", 16, 100, min_chips=8, submit=5.0)
+    for t in (5.0, 12.0, 29.0):
+        acts = pol.schedule(t, [late], [big], c)
+        assert not any(isinstance(a, (Resize, Preempt)) for a in acts)
+    acts = pol.schedule(30.0, [late], [big], c)       # cadence due: rebalance
+    assert any(isinstance(a, Resize) and a.job_id == "big" for a in acts)
+    assert any(isinstance(a, Start) and a.job_id == "late" for a in acts)
+
+
+def test_goodput_admits_into_free_chips_between_rebalances(compiler):
+    c = small_cluster()
+    pol = make_policy("goodput", rebalance_every=1000)
+    pol._last = 0.0                                  # cadence far away
+    running = mkjob(compiler, "r", 16, 100, min_chips=8)
+    c.try_allocate("r", 16)
+    running.state, running.chips, running.start_time = JobState.RUNNING, 16, 0.0
+    new = mkjob(compiler, "new", 16, 50, min_chips=8, submit=1.0)
+    acts = pol.schedule(1.0, [new], [running], c)
+    starts = [a for a in acts if isinstance(a, Start)]
+    assert len(starts) == 1 and starts[0].job_id == "new"
+    assert not any(isinstance(a, (Resize, Preempt)) for a in acts)
+
+
+def test_goodput_admit_shrinks_elastic_grant_to_quota(compiler):
+    """Between rebalances an elastic job whose full grant would bust its
+    tenant quota is admitted shrunk to the quota headroom (not rejected)."""
+    c = small_cluster()
+    pol = make_policy("goodput", rebalance_every=1000, quotas={"t": 16})
+    pol._last = 0.0
+    job = mkjob(compiler, "j", 32, 100, min_chips=8, submit=1.0)
+    acts = pol.schedule(1.0, [job], [], c)
+    starts = [a for a in acts if isinstance(a, Start)]
+    assert len(starts) == 1 and starts[0].chips == 16    # clamped, not dropped
+
+
+def test_priority_preempts_youngest_victim_even_with_t0_start(compiler):
+    """A victim started at t=0.0 must sort by its real start time, not be
+    lumped with never-started jobs (`start_time is not None`, not truthiness).
+    Youngest victims go first; the t=0 incumbent survives."""
+    c = small_cluster()
+    pol = make_policy("priority")
+    old = mkjob(compiler, "old", 16, 100)
+    young = mkjob(compiler, "young", 16, 100)
+    c.try_allocate("old", 16)
+    old.state, old.chips, old.start_time = JobState.RUNNING, 16, 0.0
+    c.try_allocate("young", 16)
+    young.state, young.chips, young.start_time = JobState.RUNNING, 16, 30.0
+    urgent = mkjob(compiler, "urgent", 16, 20, priority=10, submit=40.0)
+    acts = pol.schedule(40.0, [urgent], [old, young], c)
+    preempted = [a.job_id for a in acts if isinstance(a, Preempt)]
+    assert preempted == ["young"]
+    assert any(isinstance(a, Start) and a.job_id == "urgent" for a in acts)
