@@ -9,49 +9,61 @@ from __future__ import annotations
 
 import argparse
 import tempfile
+import time
 
 from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.compiler import ArtifactStore, TaskCompiler
 from repro.data.trace import Trace, TraceJob
 
 
-def build_trace() -> Trace:
+def build_trace(scale: int = 1) -> Trace:
+    """One long wide job + ``12 * scale`` short bursts (``--scale`` stretches
+    the contention window to match the simulator scale presets)."""
+    n_bursts = 12 * scale
     jobs = [TraceJob(id="big", submit_time=0.0, chips=256, min_chips=64,
-                     total_steps=1500, work_per_step=200.0, comm_frac=0.08,
-                     estimated_duration_s=1500)]
-    for i in range(12):
+                     total_steps=1500 * scale, work_per_step=200.0,
+                     comm_frac=0.08, estimated_duration_s=1500 * scale)]
+    for i in range(n_bursts):
         jobs.append(TraceJob(id=f"burst{i}", submit_time=100.0 + 60.0 * i,
                              chips=64, min_chips=16, total_steps=120,
                              work_per_step=50.0, comm_frac=0.05,
                              estimated_duration_s=120))
-    return Trace(jobs=jobs, meta={"scenario": "big+bursts"})
+    return Trace(jobs=jobs, meta={"scenario": "big+bursts",
+                                  "scale": scale})
 
 
-def run(policy: str, engine: str = "event"):
+def run(policy: str, engine: str = "event", scale: int = 1):
     with tempfile.TemporaryDirectory() as td:
         comp = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
         cluster = Cluster(n_pods=1, hosts_per_pod=64, chips_per_host=4)
         sim = ClusterSim(cluster, make_policy(policy, rebalance_every=30)
                          if policy == "goodput" else make_policy(policy),
                          SimConfig(tick=2.0, restart_cost_s=15,
-                                   engine=engine))
-        build_trace().install(sim, comp)
-        return sim.run()
+                                   max_time=2e6 * scale, engine=engine))
+        build_trace(scale).install(sim, comp)
+        t0 = time.perf_counter()
+        m = sim.run()
+        m["wall_s"] = time.perf_counter() - t0
+        return m
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--legacy-tick", action="store_true",
                     help="use the fixed-tick engine (parity oracle)")
+    ap.add_argument("--scale", type=int, default=1,
+                    help="burst-train multiplier (10 ~ the day-600 preset's "
+                         "horizon, 100 ~ week-6000)")
     args = ap.parse_args(argv)
     engine = "tick" if args.legacy_tick else "event"
-    print(f"engine={engine}")
+    print(f"engine={engine} scale={args.scale}")
     print(f"{'policy':10s} {'makespan':>10s} {'avg_jct':>10s} "
-          f"{'avg_wait':>10s} {'resizes~preempt':>16s}")
+          f"{'avg_wait':>10s} {'resizes~preempt':>16s} {'wall_s':>8s}")
     for pol in ("fifo", "backfill", "goodput"):
-        m = run(pol, engine)
+        m = run(pol, engine, args.scale)
         print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_jct']:10.1f} "
-              f"{m['avg_wait']:10.1f} {m['preemptions']:16.0f}")
+              f"{m['avg_wait']:10.1f} {m['preemptions']:16.0f} "
+              f"{m['wall_s']:8.3f}")
 
 
 if __name__ == "__main__":

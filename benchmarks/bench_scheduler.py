@@ -1,22 +1,28 @@
-"""Scheduler policy comparison on a campus-shaped synthetic trace — the
+"""Scheduler policy comparison on campus-shaped synthetic traces — the
 paper's core shared-cluster-efficiency claim (fair-share / gang / backfill /
 quota / preemption over Slurm, §3.1 Scheduling Layer).
 
-Workload comes from the trace layer (``repro.data.trace``): heavy-tailed job
+Workloads come from the trace layer (``repro.data.trace``): heavy-tailed job
 widths (mostly narrow, some pod-scale), Poisson arrivals at a load factor
-that produces queueing — optionally diurnally modulated (``--diurnal``) —
-three tenants with 2:1:1 weights, plus injected node failures and straggler
-slowdowns. Reported per policy: makespan, mean/p95 JCT, mean wait, cluster
-utilization, preemptions, restarts and simulator wall time.
+that produces queueing — optionally diurnally modulated — three tenants with
+2:1:1 weights, plus injected node failures (optionally rack-correlated) and
+straggler slowdowns. ``--scale`` selects trace presets: the 60-job default
+plus the day-600 and week-6000 scale points (multi-day diurnal traces with
+correlated rack failures) that gate policy studies at 10-100x. Reported per
+policy: makespan, mean/p95 JCT, mean wait, cluster utilization, preemptions,
+restarts and simulator wall time.
 
 The default engine is the O(events) discrete-event simulator; pass
 ``--legacy-tick`` for the O(horizon/tick) fixed-step engine (parity oracle).
 Each invocation writes a ``BENCH_scheduler.json`` snapshot next to the repo
-root so later PRs can track the perf trajectory.
+root so later PRs can track the perf trajectory: one entry per scale point
+under ``points`` (the default point is mirrored at the top level for
+backwards compatibility with earlier snapshots).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
@@ -25,14 +31,15 @@ from typing import Dict, List, Tuple
 
 from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.compiler import ArtifactStore, TaskCompiler
-from repro.data.trace import TraceConfig, synthesize
+from repro.data.trace import (SCALE_PRESETS, TraceConfig, horizon,
+                              scale_preset, synthesize)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            os.pardir, "BENCH_scheduler.json")
 
 
-def run_policy(policy: str, n_jobs: int = 60, seeds=(0, 1, 2),
-               engine: str = "event", diurnal: float = 0.0) -> Dict:
+def run_policy(policy: str, trace_cfg: TraceConfig, seeds=(0, 1, 2),
+               engine: str = "event") -> Dict:
     agg: Dict[str, float] = {}
     wall = 0.0
     for seed in seeds:
@@ -46,13 +53,11 @@ def run_policy(policy: str, n_jobs: int = 60, seeds=(0, 1, 2),
             sim = ClusterSim(cluster, pol, SimConfig(
                 tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
                 restart_cost_s=15, engine=engine))
-            trace = synthesize(
-                TraceConfig(n_jobs=n_jobs, seed=seed,
-                            diurnal_amplitude=diurnal),
-                list(cluster.nodes))
+            trace = synthesize(dataclasses.replace(trace_cfg, seed=seed),
+                               list(cluster.nodes))
             trace.install(sim, compiler)
             t0 = time.perf_counter()
-            m = sim.run()
+            m = sim.run(until=horizon(trace))
             wall += time.perf_counter() - t0
             for k, v in m.items():
                 agg[k] = agg.get(k, 0.0) + v / len(seeds)
@@ -60,14 +65,46 @@ def run_policy(policy: str, n_jobs: int = 60, seeds=(0, 1, 2),
     return agg
 
 
-def main(argv: List[str] = None) -> List[Tuple[str, Dict]]:
+def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
+              seeds, engine: str) -> Dict:
+    print(f"\n== scale point {name!r}: {trace_cfg.n_jobs} jobs, "
+          f"diurnal={trace_cfg.diurnal_amplitude}, "
+          f"rack_failure_frac={trace_cfg.rack_failure_frac}, "
+          f"seeds={list(seeds)} ==")
+    print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
+          f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
+          f"{'preempt':>8s} {'restarts':>8s} {'wall_s':>8s}")
+    rows: List[Tuple[str, Dict]] = []
+    for pol in policies:
+        m = run_policy(pol, trace_cfg, seeds=seeds, engine=engine)
+        rows.append((pol, m))
+        print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
+              f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
+              f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
+              f"{m['restarts']:8.1f} {m['wall_s']:8.3f}")
+    return {
+        "n_jobs": trace_cfg.n_jobs,
+        "seeds": list(seeds),
+        "diurnal_amplitude": trace_cfg.diurnal_amplitude,
+        "rack_failure_frac": trace_cfg.rack_failure_frac,
+        "total_wall_s": sum(m["wall_s"] for _, m in rows),
+        "results": {pol: m for pol, m in rows},
+    }
+
+
+def main(argv: List[str] = None) -> Dict[str, Dict]:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--legacy-tick", action="store_true",
                     help="use the fixed-tick engine (parity oracle)")
-    ap.add_argument("--jobs", type=int, default=60)
-    ap.add_argument("--seeds", type=int, default=3)
-    ap.add_argument("--diurnal", type=float, default=0.0,
-                    help="diurnal arrival-rate amplitude in [0, 1]")
+    ap.add_argument("--scale", default="default",
+                    help="comma list of trace presets to run "
+                         f"({','.join(SCALE_PRESETS)}) or 'all'")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="override n_jobs (applies to every selected preset)")
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="seeds for the default preset (scale points run 1)")
+    ap.add_argument("--diurnal", type=float, default=None,
+                    help="override diurnal arrival-rate amplitude in [0, 1]")
     ap.add_argument("--policies",
                     default="fifo,backfill,fair,priority,goodput")
     ap.add_argument("--out", default=None,
@@ -78,35 +115,31 @@ def main(argv: List[str] = None) -> List[Tuple[str, Dict]]:
     engine = "tick" if args.legacy_tick else "event"
     if args.out is None:
         args.out = DEFAULT_OUT if engine == "event" else ""
-    seeds = tuple(range(args.seeds))
+    names = list(SCALE_PRESETS) if args.scale == "all" \
+        else args.scale.split(",")
+    policies = args.policies.split(",")
 
-    rows = []
     print(f"engine={engine}")
-    print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
-          f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
-          f"{'preempt':>8s} {'restarts':>8s} {'wall_s':>8s}")
-    for pol in args.policies.split(","):
-        m = run_policy(pol, n_jobs=args.jobs, seeds=seeds, engine=engine,
-                       diurnal=args.diurnal)
-        rows.append((pol, m))
-        print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
-              f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
-              f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
-              f"{m['restarts']:8.1f} {m['wall_s']:8.3f}")
+    points: Dict[str, Dict] = {}
+    for name in names:
+        cfg = scale_preset(name)
+        if args.jobs is not None:
+            cfg = dataclasses.replace(cfg, n_jobs=args.jobs)
+        if args.diurnal is not None:
+            cfg = dataclasses.replace(cfg, diurnal_amplitude=args.diurnal)
+        seeds = tuple(range(args.seeds)) if name == "default" else (0,)
+        points[name] = run_point(name, cfg, policies, seeds, engine)
+
     if args.out:
-        snapshot = {
-            "bench": "bench_scheduler",
-            "engine": engine,
-            "n_jobs": args.jobs,
-            "seeds": list(seeds),
-            "diurnal_amplitude": args.diurnal,
-            "total_wall_s": sum(m["wall_s"] for _, m in rows),
-            "results": {pol: m for pol, m in rows},
-        }
+        snapshot = {"bench": "bench_scheduler", "engine": engine,
+                    "points": points}
+        base = points.get("default")
+        if base is not None:       # top-level mirror for older tooling
+            snapshot.update(base)
         with open(args.out, "w") as f:
             json.dump(snapshot, f, indent=1, sort_keys=True)
         print(f"snapshot -> {os.path.normpath(args.out)}")
-    return rows
+    return points
 
 
 if __name__ == "__main__":

@@ -1,0 +1,67 @@
+"""Version-bridging wrappers for jax APIs that moved between 0.4.x and 0.6+.
+
+The sharding stack targets the modern sharding-in-types surface
+(``jax.set_mesh`` / ``jax.shard_map`` / ``jax.sharding.get_abstract_mesh`` /
+``AxisType``); on a 0.4.x container those names don't exist but the legacy
+equivalents (Mesh-as-context-manager, ``jax.experimental.shard_map``,
+thread-resources physical mesh) behave identically for our usage. Every
+wrapper prefers the modern name and falls back, so the same code runs on
+both without scattering version checks through models/parallel/launch.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where they exist."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Modern jax: ``jax.set_mesh``. Legacy jax: ``Mesh`` is itself a context
+    manager that enters the resource env (enabling bare-PartitionSpec
+    ``with_sharding_constraint`` under jit), so the mesh doubles as the cm.
+    """
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when no mesh context is active."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        m = getter()
+        return m if m is not None and m.axis_names else None
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict: 0.4.x returned a per-device
+    list of dicts, modern jax returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map on modern jax, jax.experimental.shard_map below it
+    (where the replication check is spelled ``check_rep``)."""
+    modern = getattr(jax, "shard_map", None)
+    if modern is not None:
+        return modern(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma)

@@ -7,16 +7,24 @@ chips). Gang allocation is all-or-nothing; placement prefers a single pod
 as possible. The same object backs the discrete-event simulator and the real
 local executor.
 
-Invariants (property-tested):
+Capacity queries (``free_chips`` / ``total_chips``) are O(1): the cluster
+maintains incremental per-pod free counters and a node->jobs index, updated
+at every mutation point (allocate / release / fail / recover / drain), so
+the event-driven simulator's scheduling instants don't rescan all nodes.
+``abnormal_nodes`` tracks hosts whose speed != 1.0 so the straggler sweep
+can skip entirely on the (common) healthy steady state.
+
+Invariants (property-tested, plus ``check_counters`` in the sim tests):
   - sum of per-node allocations never exceeds node capacity,
   - unhealthy/draining nodes never receive allocations,
-  - release() returns exactly what was allocated.
+  - release() returns exactly what was allocated,
+  - incremental counters always equal the brute-force node scan.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 
 @dataclass
@@ -48,16 +56,32 @@ class Cluster:
                 nid = f"pod{p}/host{h:03d}"
                 self.nodes[nid] = Node(nid, p, chips_per_host)
         self.allocations: Dict[str, Allocation] = {}
+        # incremental capacity counters + reverse indices (see module doc)
+        self._free_total = n_pods * hosts_per_pod * chips_per_host
+        self._pod_free = [hosts_per_pod * chips_per_host] * n_pods
+        self._healthy_chips = self._free_total
+        self._node_jobs: Dict[str, Set[str]] = {nid: set() for nid in self.nodes}
+        self.abnormal_nodes: Set[str] = set()     # speed != 1.0
+
+    def _mutate(self, node: Node, fn) -> None:
+        """Apply ``fn(node)`` keeping the free/capacity counters in sync."""
+        free0 = node.free
+        cap0 = node.chips if node.healthy else 0
+        fn(node)
+        d_free = node.free - free0
+        if d_free:
+            self._free_total += d_free
+            self._pod_free[node.pod] += d_free
+        self._healthy_chips += (node.chips if node.healthy else 0) - cap0
 
     # -- capacity ------------------------------------------------------------
 
     @property
     def total_chips(self) -> int:
-        return sum(n.chips for n in self.nodes.values() if n.healthy)
+        return self._healthy_chips
 
     def free_chips(self, pod: Optional[int] = None) -> int:
-        return sum(n.free for n in self.nodes.values()
-                   if pod is None or n.pod == pod)
+        return self._free_total if pod is None else self._pod_free[pod]
 
     def used_chips(self) -> int:
         return sum(n.used for n in self.nodes.values())
@@ -65,6 +89,17 @@ class Cluster:
     def utilization(self) -> float:
         t = self.total_chips
         return self.used_chips() / t if t else 0.0
+
+    def check_counters(self) -> None:
+        """Assert the incremental counters match a brute-force node scan."""
+        assert self._free_total == sum(n.free for n in self.nodes.values())
+        for p in range(self.n_pods):
+            assert self._pod_free[p] == sum(
+                n.free for n in self.nodes.values() if n.pod == p)
+        assert self._healthy_chips == sum(
+            n.chips for n in self.nodes.values() if n.healthy)
+        assert self.abnormal_nodes == {
+            nid for nid, n in self.nodes.items() if n.speed != 1.0}
 
     # -- allocation ----------------------------------------------------------
 
@@ -81,13 +116,18 @@ class Cluster:
             for p in pods:
                 if self.free_chips(p) >= chips:
                     alloc = self._take(chips, [p])
-                    self.allocations[job_id] = alloc
+                    self._register(job_id, alloc)
                     return alloc
         alloc = self._take(chips, pods)
         if alloc is None:
             return None
-        self.allocations[job_id] = alloc
+        self._register(job_id, alloc)
         return alloc
+
+    def _register(self, job_id: str, alloc: Allocation) -> None:
+        self.allocations[job_id] = alloc
+        for nid, _ in alloc:
+            self._node_jobs[nid].add(job_id)
 
     def _take(self, chips: int, pods: List[int]) -> Optional[Allocation]:
         picked: Allocation = []
@@ -107,13 +147,15 @@ class Cluster:
         if need > 0:
             return None
         for nid, k in picked:
-            self.nodes[nid].used += k
+            self._mutate(self.nodes[nid], lambda n, k=k: setattr(
+                n, "used", n.used + k))
         return picked
 
     def release(self, job_id: str) -> None:
         for nid, k in self.allocations.pop(job_id, []):
-            n = self.nodes[nid]
-            n.used = max(0, n.used - k)
+            self._mutate(self.nodes[nid], lambda n, k=k: setattr(
+                n, "used", max(0, n.used - k)))
+            self._node_jobs[nid].discard(job_id)
 
     # -- topology ------------------------------------------------------------
 
@@ -136,29 +178,41 @@ class Cluster:
 
     def jobs_on_node(self, node_id: str) -> List[str]:
         """Job ids with at least one chip allocated on ``node_id``."""
-        return [jid for jid, alloc in self.allocations.items()
-                if any(nid == node_id for nid, _ in alloc)]
+        return sorted(self._node_jobs[node_id])
 
     # -- failures / stragglers ------------------------------------------------
 
     def fail_node(self, node_id: str) -> List[str]:
         """Marks a node dead. Returns job ids that were running on it."""
         node = self.nodes[node_id]
-        node.healthy = False
+        self._mutate(node, lambda n: setattr(n, "healthy", False))
         return self.jobs_on_node(node_id)
 
     def recover_node(self, node_id: str) -> None:
-        n = self.nodes[node_id]
-        n.healthy = True
-        n.used = 0
-        n.speed = 1.0
-        n.draining = False
+        # recompute `used` from live allocations rather than zeroing it:
+        # with overlapping failure windows (scale traces) a stale second
+        # recovery can land after the node was recovered and re-allocated,
+        # and wiping `used` would double-book those chips
+        live = sum(k for jid in self._node_jobs[node_id]
+                   for nid, k in self.allocations[jid] if nid == node_id)
+
+        def fn(n):
+            n.healthy = True
+            n.used = live
+            n.speed = 1.0
+            n.draining = False
+        self._mutate(self.nodes[node_id], fn)
+        self.abnormal_nodes.discard(node_id)
 
     def set_speed(self, node_id: str, speed: float) -> None:
         self.nodes[node_id].speed = speed
+        if speed == 1.0:
+            self.abnormal_nodes.discard(node_id)
+        else:
+            self.abnormal_nodes.add(node_id)
 
     def drain(self, node_id: str, on: bool = True) -> None:
-        self.nodes[node_id].draining = on
+        self._mutate(self.nodes[node_id], lambda n: setattr(n, "draining", on))
 
     def straggler_nodes(self, job_id: str, threshold: float = 0.75
                         ) -> List[str]:

@@ -146,12 +146,49 @@ class Policy:
         self.quotas = quotas or {}
         self.weights = tenant_weights or {}
         self.usage: Dict[str, float] = {}     # decayed chip-seconds / tenant
+        # incremental-driver state: None until a driver binds (legacy callers
+        # that invoke schedule()/account() directly keep the scanning paths)
+        self._tenant_chips: Optional[Dict[str, int]] = None
+        self._dirty = True                    # job/cluster state changed since
+                                              # the last full rebalance
+
+    # -- incremental driver protocol -----------------------------------------
+    # A driver (the simulator or a real control loop) that applies this
+    # policy's actions can keep the per-tenant grant aggregate and a change
+    # flag up to date, making ``account`` O(tenants) instead of O(running)
+    # and letting cadence policies skip no-op rebalances entirely.
+
+    def bind_incremental(self) -> None:
+        """Opt in to driver-maintained aggregates (idempotent)."""
+        if self._tenant_chips is None:
+            self._tenant_chips = {}
+
+    def grant_delta(self, tenant: str, delta: int) -> None:
+        """Driver hook: ``delta`` chips were granted (+) / released (-)."""
+        if self._tenant_chips is not None and delta:
+            self._tenant_chips[tenant] = \
+                self._tenant_chips.get(tenant, 0) + delta
+
+    def note_change(self) -> None:
+        """Driver hook: job/cluster state changed outside this policy's own
+        applied actions (arrival, completion, failure, recovery, rollback)."""
+        self._dirty = True
+
+    def _tenant_used(self, tenant: str, running: List[Job]) -> int:
+        if self._tenant_chips is not None:
+            return self._tenant_chips.get(tenant, 0)
+        return sum(j.chips for j in running if j.tenant == tenant)
 
     # bookkeeping called by the driver with the virtual time elapsed since
     # the last scheduling instant (dt is arbitrary, not a fixed tick)
     def account(self, dt: float, running: List[Job], decay: float = 0.999):
         for t in self.usage:
             self.usage[t] *= decay ** dt
+        if self._tenant_chips is not None:
+            for t, c in self._tenant_chips.items():
+                if c:
+                    self.usage[t] = self.usage.get(t, 0.0) + c * dt
+            return
         for j in running:
             self.usage[j.tenant] = self.usage.get(j.tenant, 0.0) + j.chips * dt
 
@@ -315,6 +352,8 @@ class GoodputElastic(Policy):
         checkpoint-resize storm can't happen on every scheduling instant."""
         actions: List[Action] = []
         free = cluster.free_chips()
+        if not pending or free <= 0:
+            return actions
         granted: Dict[str, int] = {}          # tenant -> chips this round
         for j in sorted(pending, key=lambda j: j.submit_time):
             need = j.min_chips if j.elastic else j.requested
@@ -323,8 +362,8 @@ class GoodputElastic(Policy):
             grant = min(free, j.requested) if j.elastic else j.requested
             q = self.quotas.get(j.tenant)
             if q is not None:
-                used = sum(r.chips for r in running
-                           if r.tenant == j.tenant) + granted.get(j.tenant, 0)
+                used = self._tenant_used(j.tenant, running) \
+                    + granted.get(j.tenant, 0)
                 if j.elastic:                 # shrink into quota headroom
                     grant = min(grant, q - used)
                 if grant < need or used + grant > q:
@@ -338,6 +377,13 @@ class GoodputElastic(Policy):
         if now - self._last < self.rebalance_every:
             return self._admit_only(pending, running, cluster)
         self._last = now
+        # Incremental fast path: when a driver keeps the change flag and
+        # nothing happened since the last rebalance, the job set and cluster
+        # capacity are unchanged, so the (deterministic) grant computation
+        # would reproduce the allocation that is already in place — skip it.
+        if self._tenant_chips is not None and not self._dirty:
+            return []
+        self._dirty = False
         jobs = [j for j in running + pending
                 if j.state in (JobState.RUNNING, JobState.PENDING)]
         if not jobs:

@@ -82,9 +82,14 @@ class ClusterSim:
                  cfg: SimConfig = SimConfig()):
         self.cluster = cluster
         self.policy = policy
+        self.policy.bind_incremental()
         self.cfg = cfg
         self.now = 0.0
         self.jobs: Dict[str, Job] = {}
+        # live-set indices: every state transition moves jobs between these,
+        # so scheduling instants are O(live) instead of O(all jobs ever)
+        self._pending_jobs: Dict[str, Job] = {}
+        self._running_jobs: Dict[str, Job] = {}
         self.pending_events: List[SimEvent] = []
         self.trace: List[Tuple[float, str, str]] = []
         self._arrivals: List[Tuple[float, Job]] = []
@@ -114,10 +119,16 @@ class ClusterSim:
     # -- helpers -------------------------------------------------------------
 
     def _running(self) -> List[Job]:
-        return [j for j in self.jobs.values() if j.state == JobState.RUNNING]
+        return list(self._running_jobs.values())
 
     def _pending(self) -> List[Job]:
-        return [j for j in self.jobs.values() if j.state == JobState.PENDING]
+        return list(self._pending_jobs.values())
+
+    def _admit(self, job: Job) -> None:
+        self.jobs[job.id] = job
+        self._pending_jobs[job.id] = job
+        self.policy.note_change()
+        self._log(job, "submitted")
 
     def _log(self, job: Job, msg: str) -> None:
         job.log(self.now, msg)
@@ -127,9 +138,15 @@ class ClusterSim:
         alloc = self.cluster.try_allocate(
             job.id, chips, job.spec.resources.prefer_single_pod)
         if alloc is None:
+            # grant couldn't be applied: flag the divergence so a cadence
+            # policy retries instead of skipping the next rebalance
+            self.policy.note_change()
             return
         job.state = JobState.RUNNING
         job.chips = chips
+        self._pending_jobs.pop(job.id, None)
+        self._running_jobs[job.id] = job
+        self.policy.grant_delta(job.tenant, chips)
         job.start_time = self.now
         if job.first_start is None:
             job.first_start = self.now
@@ -155,8 +172,13 @@ class ClusterSim:
         else:
             job.progress = job.ckpt_progress           # lose uncheckpointed work
         self.cluster.release(job.id)
+        self.policy.grant_delta(job.tenant, -job.chips)
+        self.policy.note_change()
+        self._running_jobs.pop(job.id, None)
         job.chips = 0
         job.state = state
+        if state == JobState.PENDING:
+            self._pending_jobs[job.id] = job
         self._log(job, f"stop -> {state.value} {reason}")
 
     def _apply(self, actions) -> None:
@@ -182,12 +204,16 @@ class ClusterSim:
                     alloc = self.cluster.try_allocate(
                         job.id, a.chips, job.spec.resources.prefer_single_pod)
                     if alloc is None:   # rollback
+                        self.policy.note_change()   # grant not applied
                         alloc = self.cluster.try_allocate(
                             job.id, job.chips,
                             job.spec.resources.prefer_single_pod)
                         if alloc is None:
+                            self.policy.grant_delta(job.tenant, -job.chips)
+                            self._running_jobs.pop(job.id, None)
                             job.state = JobState.PENDING
                             job.chips = 0
+                            self._pending_jobs[job.id] = job
                             if self._event_mode:
                                 self._clock.pop(job.id, None)
                                 self._gen[job.id] = \
@@ -196,6 +222,7 @@ class ClusterSim:
                             self._resched(job)
                         continue
                     self._log(job, f"resize {job.chips} -> {a.chips}")
+                    self.policy.grant_delta(job.tenant, a.chips - job.chips)
                     job.chips = a.chips
                     self._pause_until[job.id] = self.now + self.cfg.restart_cost_s
                     if self._event_mode:
@@ -204,9 +231,23 @@ class ClusterSim:
                         self._resched(job)
 
     def _straggler_sweep(self) -> bool:
-        """Drain + checkpoint-requeue jobs gated on slow nodes. True if any."""
+        """Drain + checkpoint-requeue jobs gated on slow nodes. True if any.
+
+        A straggler node is by definition slower than (threshold x) the
+        median of its job's nodes, so it must have speed != 1.0 — only jobs
+        touching an abnormal node can be hit, and the sweep is O(1) on the
+        healthy steady state instead of rescanning every running job.
+        """
+        if not self.cluster.abnormal_nodes:
+            return False
+        cand: set = set()
+        for nid in self.cluster.abnormal_nodes:
+            cand.update(self.cluster.jobs_on_node(nid))
         hit = False
-        for job in self._running():
+        for jid in sorted(cand):
+            job = self._running_jobs.get(jid)
+            if job is None:
+                continue
             slow = self.cluster.straggler_nodes(
                 job.id, self.cfg.straggler_threshold)
             if slow:
@@ -219,6 +260,7 @@ class ClusterSim:
         return hit
 
     def _apply_injected(self, ev: SimEvent) -> None:
+        self.policy.note_change()
         if ev.kind == "fail_node":
             victims = self.cluster.fail_node(ev.node)
             for jid in victims:
@@ -229,16 +271,23 @@ class ClusterSim:
         elif ev.kind == "recover_node":
             self.cluster.recover_node(ev.node)
         elif ev.kind == "set_speed":
+            # snapshot each affected running job's effective speed first: a
+            # job whose rate is gated elsewhere (min over its nodes) keeps a
+            # valid prediction, so its generation counter — and every event
+            # already queued for it — stays live and no re-predict is needed
+            affected = []
+            if self._event_mode:
+                for jid in self.cluster.jobs_on_node(ev.node):
+                    job = self._running_jobs.get(jid)
+                    if job is not None:
+                        affected.append((job, self.cluster.job_speed(jid)))
             self.cluster.set_speed(ev.node, ev.value)
             if ev.value >= 0.99:                  # recovered: undrain
                 self.cluster.drain(ev.node, False)
-            if self._event_mode:
-                # running jobs gated on this node change rate: re-predict
-                for jid in self.cluster.jobs_on_node(ev.node):
-                    job = self.jobs.get(jid)
-                    if job is not None and job.state == JobState.RUNNING:
-                        self._settle(job)
-                        self._resched(job)
+            for job, speed0 in affected:
+                if self.cluster.job_speed(job.id) != speed0:
+                    self._settle(job)
+                    self._resched(job)
 
     # -- legacy tick engine ---------------------------------------------------
 
@@ -248,8 +297,7 @@ class ClusterSim:
         # arrivals
         while self._arrivals and self._arrivals[0][0] <= self.now:
             _, job = self._arrivals.pop(0)
-            self.jobs[job.id] = job
-            self._log(job, "submitted")
+            self._admit(job)
         # injected events
         while self.pending_events and self.pending_events[0].time <= self.now:
             self._apply_injected(self.pending_events.pop(0))
@@ -328,9 +376,7 @@ class ClusterSim:
     def _handle(self, kind: str, payload) -> bool:
         """Process one event; returns True if the policy should run."""
         if kind == "arrival":
-            job = payload
-            self.jobs[job.id] = job
-            self._log(job, "submitted")
+            self._admit(payload)
             self._n_external -= 1
             return True
         if kind == "inject":
@@ -338,8 +384,7 @@ class ClusterSim:
             self._n_external -= 1
             return True
         if kind == "wakeup":
-            live = any(j.state in (JobState.PENDING, JobState.RUNNING)
-                       for j in self.jobs.values())
+            live = bool(self._pending_jobs or self._running_jobs)
             if live or self._n_external > 0:
                 self._push(self.now + payload, "wakeup", payload)
             return True
@@ -433,12 +478,8 @@ class ClusterSim:
         return self.metrics()
 
     def _all_done(self) -> bool:
-        if self._arrivals:
-            return False
-        js = self.jobs.values()
-        return bool(js) and all(
-            j.state in (JobState.COMPLETED, JobState.FAILED, JobState.KILLED)
-            for j in js)
+        return (not self._arrivals and bool(self.jobs)
+                and not self._pending_jobs and not self._running_jobs)
 
     # -- metrics ---------------------------------------------------------------
 

@@ -1,2 +1,3 @@
 from repro.data.synthetic import SyntheticLM, input_specs
-from repro.data.trace import Trace, TraceConfig, TraceJob, synthesize
+from repro.data.trace import (SCALE_PRESETS, Trace, TraceConfig, TraceJob,
+                              horizon, scale_preset, synthesize)

@@ -155,6 +155,50 @@ class Trace:
 
 
 # ---------------------------------------------------------------------------
+# Scale presets
+# ---------------------------------------------------------------------------
+# The paper's operational analysis covers months of multi-tenant campus load;
+# these presets scale the synthetic workload from the 60-job smoke default to
+# day- and week-shaped traces (diurnal arrival modulation, heavy-tailed
+# widths, correlated rack failures) for the simulator scale benchmarks.
+
+SCALE_PRESETS: Dict[str, TraceConfig] = {
+    # the original benchmark workload (~0.3 day, homogeneous Poisson)
+    "default": TraceConfig(),
+    # one day on campus: 600 jobs over ~84000 s with a strong diurnal cycle,
+    # a heavy-tailed width mix and a quarter of failures hitting whole racks
+    "day-600": TraceConfig(
+        n_jobs=600, mean_gap_s=140.0, diurnal_amplitude=0.6,
+        width_alpha=1.1, n_failures=24, rack_failure_frac=0.25,
+        n_stragglers=24, ops_start=1800.0, ops_window=80000.0),
+    # one week: 6000 jobs over ~600000 s, deeper diurnal swing, more (and
+    # more correlated) failures — the 100x scale gate for policy studies
+    "week-6000": TraceConfig(
+        n_jobs=6000, mean_gap_s=100.0, diurnal_amplitude=0.7,
+        width_alpha=1.2, n_failures=120, rack_failure_frac=0.3,
+        n_stragglers=96, ops_start=3600.0, ops_window=590000.0),
+}
+
+
+def scale_preset(name: str, *, seed: int = 0) -> TraceConfig:
+    """A copy of the named preset with the requested seed."""
+    try:
+        cfg = SCALE_PRESETS[name]
+    except KeyError:
+        raise ValueError(f"unknown scale preset {name!r}; "
+                         f"choose from {sorted(SCALE_PRESETS)}") from None
+    return dataclasses.replace(cfg, seed=seed)
+
+
+def horizon(trace: Trace, slack: float = 200000.0) -> float:
+    """A ``run(until=...)`` bound that comfortably covers the trace: last
+    arrival/event plus drain slack (the sim stops early once all jobs end)."""
+    t_job = max((j.submit_time for j in trace.jobs), default=0.0)
+    t_ev = max((e.time for e in trace.events), default=0.0)
+    return max(t_job, t_ev) + slack
+
+
+# ---------------------------------------------------------------------------
 # Synthesis
 # ---------------------------------------------------------------------------
 

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
 from repro.data.synthetic import input_specs
@@ -210,7 +211,7 @@ def lower_train(cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
     bshard = batch_shardings(mesh, b_axes, batch)
     jitted = jax.jit(step, in_shardings=(state_sh, bshard),
                      out_shardings=(state_sh, None), donate_argnums=0)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jitted.lower(state, batch)
 
 
@@ -240,7 +241,7 @@ def lower_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
 
     jitted = jax.jit(fn, in_shardings=(pshard, bshard, lshard),
                      out_shardings=(None, cshard))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jitted.lower(params, batch, lengths)
 
 
@@ -269,7 +270,7 @@ def lower_decode(cfg: ModelConfig, shape: ShapeConfig, mesh, plan,
 
     jitted = jax.jit(fn, in_shardings=(pshard, cshard, tshard),
                      out_shardings=(None, cshard), donate_argnums=1)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jitted.lower(params, cache, tok)
 
 
@@ -277,7 +278,7 @@ def compile_and_report(lowered, mesh, label: str) -> Dict:
     t0 = time.time()
     compiled = lowered.compile()
     t_compile = time.time() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     rec: Dict = {"label": label, "compile_s": round(t_compile, 2),
                  "flops": float(ca.get("flops", 0.0)),
                  "bytes_accessed": float(ca.get("bytes accessed", 0.0))}

@@ -5,12 +5,7 @@ jax device state — the dry-run must set XLA_FLAGS before any jax init.
 """
 from __future__ import annotations
 
-import jax
-
-
-def _mk(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+from repro.compat import make_mesh as _mk
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.ckpt import Checkpointer, latest_step
 from repro.configs import get_config
 from repro.data import SyntheticLM
@@ -78,7 +79,7 @@ def main() -> None:
                        n_hosts=jax.process_count())
     ck = Checkpointer(args.ckpt_dir, keep=3) if args.ckpt_dir else None
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         start = 0
         if ck and latest_step(args.ckpt_dir) is not None:
             state, man = ck.restore(shardings=st_sh)

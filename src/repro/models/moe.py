@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.params import ParamDef
 from repro.models.layers import ffn_defs, apply_ffn
@@ -144,7 +145,9 @@ def moe_ep(cfg: ModelConfig, p: Dict, x: jax.Array, *,
     moe = cfg.moe
     E = padded_experts(moe)
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
+    if mesh is None:                      # no ambient mesh: single-rank path
+        return moe_dense_oracle(cfg, p, x)
     axis_sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
     n_ranks = axis_sizes.get(ep_axis, 1)
     if n_ranks <= 1 or E % n_ranks != 0:
@@ -248,8 +251,8 @@ def moe_ep(cfg: ModelConfig, p: Dict, x: jax.Array, *,
                 P(ep_axis, None, None))
     specs_out = (P(bspec, None, None), {kk: P() for kk in
                                         ("f_sum", "p_sum", "z_sum", "n")})
-    f = jax.shard_map(local, mesh=mesh, in_specs=specs_in,
-                      out_specs=specs_out, check_vma=False)
+    f = compat.shard_map(local, mesh=mesh, in_specs=specs_in,
+                         out_specs=specs_out, check_vma=False)
     y, aux = f(x, p["router"], p["w_in"], p["w_out"])
     y = y + _shared(cfg, p, x)
     return y, _aux_loss(cfg, aux)

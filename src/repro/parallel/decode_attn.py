@@ -21,13 +21,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
 def _ambient_mesh(mesh):
     if mesh is not None:
         return mesh
-    m = jax.sharding.get_abstract_mesh()
+    m = compat.get_abstract_mesh()
     if m is None or not m.axis_names:
         raise ValueError("sharded decode attention needs a mesh "
                          "(jax.set_mesh(...) or pass mesh=)")
@@ -109,7 +111,7 @@ def sharded_decode_attention(q: jax.Array, k_cache: jax.Array,
         return o.reshape(-1, H, HD).astype(q.dtype), k_loc, v_loc
 
     seq_spec = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
-    f = jax.shard_map(
+    f = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, seq_spec, None, None),
                   P(bspec, seq_spec, None, None), P(bspec, None, None),
@@ -196,7 +198,7 @@ def sharded_mla_decode(q_lat: jax.Array, q_rope: jax.Array,
         return ctx.astype(q_lat.dtype), ckv_loc, kr_loc
 
     seq_spec = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
-    f = jax.shard_map(
+    f = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, None, None),
                   P(bspec, seq_spec, None), P(bspec, seq_spec, None),

@@ -14,15 +14,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 
 def mesh228():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def mesh24():
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 4), ("data", "model"))
 
 
 def check_moe_ep_matches_oracle():
@@ -42,7 +42,7 @@ def check_moe_ep_matches_oracle():
     x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
                           jnp.float32)
     y_ref, aux_ref = moe_dense_oracle(cfg, p, x)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
         y_ep, aux_ep = jax.jit(lambda p, x: moe_ep(
             cfg, p, x, ep_axis="model", token_axes=("data",)))(p, xs)
@@ -79,7 +79,7 @@ def check_moe_ep_gradients():
         y, aux = moe_dense_oracle(cfg, p, x)
         return jnp.sum(y ** 2) + aux["moe_load_balance"]
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
         g_ep = jax.jit(jax.grad(loss_ep))(p, xs)
     g_ref = jax.grad(loss_ref)(p, x)
@@ -109,7 +109,7 @@ def check_moe_allgather_combine():
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 10, cfg.d_model),
                           jnp.float32)       # n=20 per shard, 20 % 4 != 0
     y_ref, _ = moe_dense_oracle(cfg, p, x)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
         y_ag, _ = jax.jit(lambda p, x: moe_ep(
             cfg, p, x, combine="allgather"))(p, xs)
@@ -139,7 +139,7 @@ def check_sharded_decode_attention():
     lens = jnp.asarray([3, 17, 25, 31], jnp.int32)
     kc2, vc2 = write_kv_cache(kc, vc, kn, vn, lens)
     o_ref = decode_attention_ref(q, kc2, vc2, lens + 1)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
         o, kc3, vc3 = jax.jit(lambda *a: sharded_decode_attention(
             *a, seq_axes=("data", "model"), batch_axes=("pod",)))(
@@ -171,7 +171,7 @@ def check_sharded_mla_decode():
     scale = 1.0 / math.sqrt(R + DR)
     ref, _, _ = sharded_mla_decode(q_lat, q_rope, ckv, kr, ckv_n, kr_n, lens,
                                    sm_scale=scale, seq_axes=())
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
         o, _, _ = jax.jit(lambda *a: sharded_mla_decode(
             *a, sm_scale=scale, seq_axes=("model",), batch_axes=("data",)))(
@@ -211,7 +211,7 @@ def check_distributed_train_step_parity():
     st_sh = {"params": pshard, "opt": {"m": pshard, "v": pshard,
                                        "step": scalar}}
     bshard = batch_shardings(mesh, ("data",), batch)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         st = jax.device_put(state, st_sh)
         bt = jax.device_put(batch, bshard)
         step_d = jax.jit(build_train_step(cfg, ocfg, TrainConfig(2), flags),

@@ -14,6 +14,10 @@ from repro.models.attention import (decode_attention_ref, flash_attention_xla,
 from repro.models.mla import mla_decode_attention
 from repro.models import model_defs, init_params
 
+# ~42s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("S,chunk,qc", [(64, 16, 4), (128, 32, 2), (96, 64, 1)])
 @pytest.mark.parametrize("causal", [True, False])

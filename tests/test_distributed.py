@@ -8,6 +8,10 @@ import pytest
 
 SCRIPT = os.path.join(os.path.dirname(__file__), "distributed_checks.py")
 
+# ~99s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
+
 CHECKS = [
     "moe_ep_matches_oracle",
     "moe_ep_gradients",

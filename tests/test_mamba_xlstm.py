@@ -10,6 +10,10 @@ from repro.models import model_defs, init_params
 from repro.models import mamba as MB
 from repro.models import xlstm as XL
 
+# ~27s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
+
 
 def _jamba_layer():
     cfg = get_config("jamba-1.5-large-398b", smoke=True)

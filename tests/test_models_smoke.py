@@ -11,6 +11,10 @@ from repro.models import model_defs, init_params
 from repro.models.transformer import train_logits
 from repro.train import OptConfig, TrainConfig, build_train_step, init_train_state
 
+# ~276s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

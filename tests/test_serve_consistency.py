@@ -10,6 +10,10 @@ from repro.configs import list_archs, get_config
 from repro.models import model_defs, init_params
 from repro.models.transformer import train_logits, prefill, decode_step
 
+# ~93s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
+
 B, S, NDEC = 2, 32, 4
 
 

@@ -7,6 +7,10 @@ import pytest
 
 from repro.core import (JobState, ResourceSpec, RuntimeEnv, TACC, TaskSpec)
 
+# ~46s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
+
 
 def train_spec(name="train", steps=30, *, tenant="a", priority=0, chips=4,
                ckpt_every=10, seed=0):

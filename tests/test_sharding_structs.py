@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import list_archs, get_config
 from repro.configs.base import SHAPES
 from repro.launch.mesh import make_local_mesh
@@ -89,7 +90,7 @@ def test_local_mesh_runs_constrained_forward():
     params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
     toks = jnp.ones((2, 16), jnp.int32)
     flags = RunFlags(act_spec=P("data", "model", None))
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         logits, _ = jax.jit(lambda p, b: train_logits(cfg, p, b, flags=flags))(
             params, {"tokens": toks})
     assert logits.shape == (2, 16, cfg.vocab_size)

@@ -8,7 +8,12 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.data import SyntheticLM
 from repro.train import OptConfig, TrainConfig, build_train_step, init_train_state
+import pytest
 
+
+# ~11s of wall time: excluded from the default tier-1 run (pytest.ini
+# deselects `slow`); run explicitly via `pytest -m slow` / `-m ""`.
+pytestmark = pytest.mark.slow
 
 def test_loss_decreases_markedly():
     cfg = get_config("tacc-100m", smoke=True)
