@@ -7,10 +7,20 @@ widths (mostly narrow, some pod-scale), Poisson arrivals at a load factor
 that produces queueing — optionally diurnally modulated — three tenants with
 2:1:1 weights, plus injected node failures (optionally rack-correlated) and
 straggler slowdowns. ``--scale`` selects trace presets: the 60-job default
-plus the day-600 and week-6000 scale points (multi-day diurnal traces with
-correlated rack failures) that gate policy studies at 10-100x. Reported per
-policy: makespan, mean/p95 JCT, mean wait, cluster utilization, preemptions,
-restarts and simulator wall time.
+plus the day-600 / week-6000 / month-50k scale points (multi-day diurnal
+traces with correlated rack failures) that gate policy studies at 10-1000x.
+Reported per policy: makespan, mean/p95 JCT, mean wait, cluster utilization,
+preemptions, restarts and simulator wall time.
+
+Trace-artifact replay workflow: before synthesizing a scale point, the bench
+looks for a committed artifact ``benchmarks/traces/<preset>-seed<N>.json.gz``
+whose embedded config matches the preset (any --jobs/--diurnal override
+bypasses it).  A matching artifact is replayed byte-identically, so metric
+columns are comparable across PRs even when the synthesizer changes; the
+``month-50k`` seed-0 artifact is committed for exactly this purpose.  Pass
+``--save-traces`` to (re)write artifacts for the selected presets, and
+``benchmarks/check_bench.py`` to diff a fresh snapshot against the committed
+one (wall-regression + metric-drift gate).
 
 The default engine is the O(events) discrete-event simulator; pass
 ``--legacy-tick`` for the O(horizon/tick) fixed-step engine (parity oracle).
@@ -27,25 +37,59 @@ import json
 import os
 import tempfile
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.compiler import ArtifactStore, TaskCompiler
-from repro.data.trace import (SCALE_PRESETS, TraceConfig, horizon,
+from repro.data.trace import (SCALE_PRESETS, Trace, TraceConfig, horizon,
                               scale_preset, synthesize)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            os.pardir, "BENCH_scheduler.json")
+DEFAULT_TRACE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "traces")
 
 
-def run_policy(policy: str, trace_cfg: TraceConfig, seeds=(0, 1, 2),
+def make_cluster() -> Cluster:
+    return Cluster(n_pods=2, hosts_per_pod=64, chips_per_host=4)
+
+
+def artifact_path(trace_dir: str, name: str, seed: int) -> str:
+    return os.path.join(trace_dir, f"{name}-seed{seed}.json.gz")
+
+
+def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
+              overridden: bool, save: bool) -> Trace:
+    """Load the committed trace artifact when it matches ``cfg``; otherwise
+    synthesize.  ``save`` forces resynthesis and (re)writes the artifact —
+    the refresh path when the synthesizer itself changes."""
+    cfg = dataclasses.replace(cfg, seed=seed)
+    path = artifact_path(trace_dir, name, seed)
+    if not overridden and not save and os.path.exists(path):
+        trace = Trace.load(path)
+        # normalize through JSON: artifact meta holds lists where the
+        # dataclass has tuples
+        want = json.loads(json.dumps(dataclasses.asdict(cfg)))
+        if trace.meta.get("config") == want:
+            return trace
+        print(f"  [trace artifact {os.path.basename(path)} is stale "
+              f"(config mismatch); resynthesizing]")
+    trace = synthesize(cfg, list(make_cluster().nodes))
+    if save and not overridden:
+        os.makedirs(trace_dir, exist_ok=True)
+        trace.save(path)
+        print(f"  [trace artifact saved -> {os.path.normpath(path)}]")
+    return trace
+
+
+def run_policy(policy: str, traces: List[Trace],
                engine: str = "event") -> Dict:
     agg: Dict[str, float] = {}
     wall = 0.0
-    for seed in seeds:
+    for trace in traces:
         with tempfile.TemporaryDirectory() as td:
             compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
-            cluster = Cluster(n_pods=2, hosts_per_pod=64, chips_per_host=4)
+            cluster = make_cluster()
             pol = make_policy(policy,
                               quotas={"lab-c": 192},
                               tenant_weights={"lab-a": 2, "lab-b": 1,
@@ -53,30 +97,31 @@ def run_policy(policy: str, trace_cfg: TraceConfig, seeds=(0, 1, 2),
             sim = ClusterSim(cluster, pol, SimConfig(
                 tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
                 restart_cost_s=15, engine=engine))
-            trace = synthesize(dataclasses.replace(trace_cfg, seed=seed),
-                               list(cluster.nodes))
             trace.install(sim, compiler)
             t0 = time.perf_counter()
             m = sim.run(until=horizon(trace))
             wall += time.perf_counter() - t0
             for k, v in m.items():
-                agg[k] = agg.get(k, 0.0) + v / len(seeds)
+                agg[k] = agg.get(k, 0.0) + v / len(traces)
     agg["wall_s"] = wall
     return agg
 
 
 def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
-              seeds, engine: str) -> Dict:
+              seeds, engine: str, trace_dir: str = DEFAULT_TRACE_DIR,
+              overridden: bool = False, save_traces: bool = False) -> Dict:
     print(f"\n== scale point {name!r}: {trace_cfg.n_jobs} jobs, "
           f"diurnal={trace_cfg.diurnal_amplitude}, "
           f"rack_failure_frac={trace_cfg.rack_failure_frac}, "
           f"seeds={list(seeds)} ==")
+    traces = [get_trace(name, trace_cfg, seed, trace_dir, overridden,
+                        save_traces) for seed in seeds]
     print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
           f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
           f"{'preempt':>8s} {'restarts':>8s} {'wall_s':>8s}")
     rows: List[Tuple[str, Dict]] = []
     for pol in policies:
-        m = run_policy(pol, trace_cfg, seeds=seeds, engine=engine)
+        m = run_policy(pol, traces, engine=engine)
         rows.append((pol, m))
         print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
               f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
@@ -92,8 +137,24 @@ def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
     }
 
 
+TRACE_HELP = """\
+trace-artifact replay workflow:
+  Scale points replay committed artifacts from --trace-dir
+  (<preset>-seed<N>.json.gz, written with --save-traces) whenever the
+  artifact's embedded TraceConfig matches the preset; otherwise they
+  synthesize deterministically from the preset seed.  Replaying the same
+  bytes across PRs makes BENCH_scheduler.json metric columns directly
+  comparable even if the synthesizer changes — the month-50k seed-0
+  artifact is committed for exactly this purpose.  After a bench run,
+  gate regressions with:  python benchmarks/check_bench.py
+  (fails on >20% wall_s growth or metric drift outside the documented
+  tolerances vs the committed snapshot)."""
+
+
 def main(argv: List[str] = None) -> Dict[str, Dict]:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0], epilog=TRACE_HELP,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--legacy-tick", action="store_true",
                     help="use the fixed-tick engine (parity oracle)")
     ap.add_argument("--scale", default="default",
@@ -107,6 +168,13 @@ def main(argv: List[str] = None) -> Dict[str, Dict]:
                     help="override diurnal arrival-rate amplitude in [0, 1]")
     ap.add_argument("--policies",
                     default="fifo,backfill,fair,priority,goodput")
+    ap.add_argument("--trace-dir", default=DEFAULT_TRACE_DIR,
+                    help="directory of committed trace artifacts "
+                         "(<preset>-seed<N>.json.gz); a matching artifact "
+                         "is replayed instead of resynthesized so metrics "
+                         "stay byte-comparable across PRs")
+    ap.add_argument("--save-traces", action="store_true",
+                    help="(re)write trace artifacts for the selected presets")
     ap.add_argument("--out", default=None,
                     help="where to write the JSON snapshot ('' disables; "
                          "default: BENCH_scheduler.json, but legacy-tick "
@@ -118,6 +186,7 @@ def main(argv: List[str] = None) -> Dict[str, Dict]:
     names = list(SCALE_PRESETS) if args.scale == "all" \
         else args.scale.split(",")
     policies = args.policies.split(",")
+    overridden = args.jobs is not None or args.diurnal is not None
 
     print(f"engine={engine}")
     points: Dict[str, Dict] = {}
@@ -128,7 +197,10 @@ def main(argv: List[str] = None) -> Dict[str, Dict]:
         if args.diurnal is not None:
             cfg = dataclasses.replace(cfg, diurnal_amplitude=args.diurnal)
         seeds = tuple(range(args.seeds)) if name == "default" else (0,)
-        points[name] = run_point(name, cfg, policies, seeds, engine)
+        points[name] = run_point(name, cfg, policies, seeds, engine,
+                                 trace_dir=args.trace_dir,
+                                 overridden=overridden,
+                                 save_traces=args.save_traces)
 
     if args.out:
         snapshot = {"bench": "bench_scheduler", "engine": engine,

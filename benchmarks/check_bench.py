@@ -1,0 +1,116 @@
+"""Regression gate for ``BENCH_scheduler.json``.
+
+Diffs a candidate scheduler-bench snapshot (default: the working-tree
+``BENCH_scheduler.json``) against a baseline (default: the committed
+``git show HEAD:BENCH_scheduler.json``) and fails on
+
+  - a wall-clock regression: per policy/point ``wall_s`` more than
+    WALL_REGRESSION (20%) above baseline, ignoring deltas under the
+    WALL_NOISE_FLOOR_S absolute floor (tiny walls are timer noise), or
+  - metric drift outside the documented tolerances: the deterministic
+    policies (fifo / priority / backfill) must reproduce every metric
+    exactly on a replayed trace; fair / goodput get METRIC_REL_TOL
+    because usage accounting happens at scheduling instants and drifts
+    a few percent with engine/ordering changes (see ROADMAP), and
+    restart/preemption counts get the same relative slack.
+
+Intended wiring: CI (or a developer) re-runs ``bench_scheduler.py`` and then
+``python benchmarks/check_bench.py`` before committing the refreshed
+snapshot; ``tests/test_check_bench.py`` keeps the comparison logic itself
+under tier-1 (metric gate only — wall noise on shared machines must not
+flake the default test run).
+
+Exit status: 0 = within tolerance, 1 = violations (printed one per line).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+DEFAULT_CANDIDATE = os.path.join(REPO_ROOT, "BENCH_scheduler.json")
+
+# documented tolerances (see module docstring)
+WALL_REGRESSION = 0.20          # fail on > 20% wall_s growth ...
+WALL_NOISE_FLOOR_S = 0.25       # ... but only above this absolute delta
+EXACT_POLICIES = {"fifo", "priority", "backfill"}
+METRIC_REL_TOL = 0.05           # fair / goodput metric drift allowance
+SKIP_KEYS = {"wall_s"}          # walls are gated separately
+
+
+def load_baseline(ref: str) -> Dict:
+    """``ref`` is a path, or ``git:<rev>`` for the committed snapshot."""
+    if ref.startswith("git:"):
+        out = subprocess.run(
+            ["git", "show", f"{ref[4:]}:BENCH_scheduler.json"],
+            cwd=REPO_ROOT, capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    with open(ref) as f:
+        return json.load(f)
+
+
+def _rel_close(a: float, b: float, rel: float) -> bool:
+    return abs(a - b) <= rel * max(abs(a), abs(b), 1e-12)
+
+
+def compare_snapshots(base: Dict, cand: Dict, *,
+                      check_wall: bool = True) -> List[str]:
+    """Return human-readable violations of the documented tolerances.
+
+    Only scale points / policies present in BOTH snapshots are compared, so
+    adding a new point or policy never fails the gate by itself.
+    """
+    violations: List[str] = []
+    b_points, c_points = base.get("points", {}), cand.get("points", {})
+    for point in sorted(set(b_points) & set(c_points)):
+        b_res = b_points[point].get("results", {})
+        c_res = c_points[point].get("results", {})
+        for policy in sorted(set(b_res) & set(c_res)):
+            bm, cm = b_res[policy], c_res[policy]
+            if check_wall and "wall_s" in bm and "wall_s" in cm:
+                growth = cm["wall_s"] - bm["wall_s"]
+                if growth > WALL_NOISE_FLOOR_S and \
+                        growth > WALL_REGRESSION * bm["wall_s"]:
+                    violations.append(
+                        f"{point}/{policy}: wall_s regressed "
+                        f"{bm['wall_s']:.3f} -> {cm['wall_s']:.3f} "
+                        f"(> {WALL_REGRESSION:.0%} + noise floor)")
+            rel = 0.0 if policy in EXACT_POLICIES else METRIC_REL_TOL
+            for key in sorted(set(bm) & set(cm) - SKIP_KEYS):
+                if not _rel_close(cm[key], bm[key], rel):
+                    violations.append(
+                        f"{point}/{policy}: {key} drifted "
+                        f"{bm[key]!r} -> {cm[key]!r} "
+                        f"(tolerance rel={rel})")
+    return violations
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--candidate", default=DEFAULT_CANDIDATE,
+                    help="snapshot to check (default: working tree)")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="baseline snapshot: a path or git:<rev> "
+                         "(default: git:HEAD)")
+    ap.add_argument("--no-wall", action="store_true",
+                    help="skip the wall_s gate (metric drift only)")
+    args = ap.parse_args(argv)
+    base = load_baseline(args.baseline)
+    with open(args.candidate) as f:
+        cand = json.load(f)
+    violations = compare_snapshots(base, cand, check_wall=not args.no_wall)
+    for v in violations:
+        print(f"FAIL {v}")
+    if not violations:
+        n = len(set(base.get("points", {})) & set(cand.get("points", {})))
+        print(f"ok: {n} scale point(s) within tolerance "
+              f"({args.baseline} vs {args.candidate})")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,21 +7,30 @@ chips). Gang allocation is all-or-nothing; placement prefers a single pod
 as possible. The same object backs the discrete-event simulator and the real
 local executor.
 
-Capacity queries (``free_chips`` / ``total_chips``) are O(1): the cluster
-maintains incremental per-pod free counters and a node->jobs index, updated
-at every mutation point (allocate / release / fail / recover / drain), so
-the event-driven simulator's scheduling instants don't rescan all nodes.
-``abnormal_nodes`` tracks hosts whose speed != 1.0 so the straggler sweep
-can skip entirely on the (common) healthy steady state.
+Capacity queries (``free_chips`` / ``total_chips`` / ``used_chips``) are
+O(1): the cluster maintains incremental per-pod free counters, a used-chips
+total and a node->jobs index, updated at every mutation point (allocate /
+release / fail / recover / drain), so the event-driven simulator's
+scheduling instants don't rescan all nodes.  Placement is O(chips) per gang
+allocation: each pod keeps *bucketed free lists* — one lazy min-heap of node
+ids per free-chip count (1..chips_per_host) — so ``_take`` pops the
+fullest-first / lowest-id-first node in O(log hosts) instead of sorting the
+whole pod, while picking the exact same nodes the sort-based scan would
+(the placement parity tests pin this).  ``abnormal_nodes`` tracks hosts
+whose speed != 1.0 so the straggler sweep can skip entirely on the (common)
+healthy steady state.
 
 Invariants (property-tested, plus ``check_counters`` in the sim tests):
   - sum of per-node allocations never exceeds node capacity,
   - unhealthy/draining nodes never receive allocations,
   - release() returns exactly what was allocated,
-  - incremental counters always equal the brute-force node scan.
+  - incremental counters always equal the brute-force node scan,
+  - every live bucket entry sits in the bucket of its node's current free
+    count, and every allocatable node has exactly one live entry.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
@@ -60,18 +69,33 @@ class Cluster:
         self._free_total = n_pods * hosts_per_pod * chips_per_host
         self._pod_free = [hosts_per_pod * chips_per_host] * n_pods
         self._healthy_chips = self._free_total
+        self._used_total = 0
         self._node_jobs: Dict[str, Set[str]] = {nid: set() for nid in self.nodes}
         self.abnormal_nodes: Set[str] = set()     # speed != 1.0
+        # bucketed free lists: _buckets[pod][f] is a lazy min-heap of
+        # (node_id, gen) for nodes with free == f; an entry is live iff its
+        # gen matches _node_gen[node_id] (bumped on every free-count change)
+        self._node_gen: Dict[str, int] = {nid: 0 for nid in self.nodes}
+        self._buckets: List[List[list]] = [
+            [[] for _ in range(chips_per_host + 1)] for _ in range(n_pods)]
+        for nid, node in self.nodes.items():
+            heapq.heappush(self._buckets[node.pod][chips_per_host], (nid, 0))
 
     def _mutate(self, node: Node, fn) -> None:
-        """Apply ``fn(node)`` keeping the free/capacity counters in sync."""
+        """Apply ``fn(node)`` keeping counters and bucket lists in sync."""
         free0 = node.free
+        used0 = node.used
         cap0 = node.chips if node.healthy else 0
         fn(node)
         d_free = node.free - free0
         if d_free:
             self._free_total += d_free
             self._pod_free[node.pod] += d_free
+            gen = self._node_gen[node.id] = self._node_gen[node.id] + 1
+            if node.free > 0:
+                heapq.heappush(self._buckets[node.pod][node.free],
+                               (node.id, gen))
+        self._used_total += node.used - used0
         self._healthy_chips += (node.chips if node.healthy else 0) - cap0
 
     # -- capacity ------------------------------------------------------------
@@ -84,7 +108,7 @@ class Cluster:
         return self._free_total if pod is None else self._pod_free[pod]
 
     def used_chips(self) -> int:
-        return sum(n.used for n in self.nodes.values())
+        return self._used_total
 
     def utilization(self) -> float:
         t = self.total_chips
@@ -98,8 +122,19 @@ class Cluster:
                 n.free for n in self.nodes.values() if n.pod == p)
         assert self._healthy_chips == sum(
             n.chips for n in self.nodes.values() if n.healthy)
+        assert self._used_total == sum(n.used for n in self.nodes.values())
         assert self.abnormal_nodes == {
             nid for nid, n in self.nodes.items() if n.speed != 1.0}
+        # bucket lists: live entries of every (pod, free-count) bucket equal
+        # the brute-force scan (a live entry was pushed at its node's latest
+        # free change, so gen match implies the bucket is the right one)
+        for p in range(self.n_pods):
+            for f in range(1, self.chips_per_host + 1):
+                live = {nid for nid, gen in self._buckets[p][f]
+                        if gen == self._node_gen[nid]}
+                scan = {nid for nid, n in self.nodes.items()
+                        if n.pod == p and n.free == f}
+                assert live == scan, (p, f, live, scan)
 
     # -- allocation ----------------------------------------------------------
 
@@ -130,23 +165,34 @@ class Cluster:
             self._node_jobs[nid].add(job_id)
 
     def _take(self, chips: int, pods: List[int]) -> Optional[Allocation]:
+        """Gang-pick ``chips`` from ``pods``: fullest nodes first, lowest id
+        breaking ties — the same order a (-free, id) sort of every node would
+        yield, at O(chips + log hosts) via the bucketed free lists."""
         picked: Allocation = []
+        popped: List[Tuple[int, int, Tuple[str, int]]] = []
         need = chips
         for p in pods:
-            nodes = sorted((n for n in self.nodes.values()
-                            if n.pod == p and n.free > 0),
-                           key=lambda n: (-n.free, n.id))
-            for n in nodes:
-                take = min(n.free, need)
-                picked.append((n.id, take))
-                need -= take
-                if need == 0:
-                    break
             if need == 0:
                 break
+            for f in range(self.chips_per_host, 0, -1):
+                if need == 0:
+                    break
+                heap = self._buckets[p][f]
+                while need > 0 and heap:
+                    entry = heapq.heappop(heap)
+                    if entry[1] != self._node_gen[entry[0]]:
+                        continue          # stale: drop it for good
+                    popped.append((p, f, entry))
+                    take = min(f, need)
+                    picked.append((entry[0], take))
+                    need -= take
         if need > 0:
+            # gang doesn't fit: restore the live entries we popped
+            for p, f, entry in popped:
+                heapq.heappush(self._buckets[p][f], entry)
             return None
         for nid, k in picked:
+            # re-buckets the node (gen bump), so the popped entry is stale
             self._mutate(self.nodes[nid], lambda n, k=k: setattr(
                 n, "used", n.used + k))
         return picked
@@ -220,6 +266,11 @@ class Cluster:
         if not nodes:
             return []
         speeds = sorted(self.nodes[n].speed for n in nodes)
-        median = speeds[len(speeds) // 2]
+        mid = len(speeds) // 2
+        # true median: interpolate the two middle elements on even lengths
+        # (the old upper-element pick inflated the median whenever exactly
+        # half a gang was slow, over-flagging stragglers)
+        median = speeds[mid] if len(speeds) % 2 \
+            else 0.5 * (speeds[mid - 1] + speeds[mid])
         return [n for n in nodes
                 if self.nodes[n].speed < threshold * median]

@@ -22,13 +22,26 @@ instant (any dt, not a fixed cadence), and a policy that wants to be invoked
 on a timer even when no job state changes advertises it via
 ``wakeup_interval()`` (the event-driven simulator turns that into periodic
 wake-up events — how ``GoodputElastic.rebalance_every`` keeps firing).
+
+Indexed pending queues: a driver that opts in with ``bind_queues()`` and
+feeds the ``job_added`` / ``job_removed`` / ``job_started`` / ``job_stopped``
+/ ``job_progressed`` / ``usage_decayed`` hooks lets every policy keep an
+*ordered view* of its queue (arrival order for fifo/backfill/goodput-admit,
+per-tenant arrival order for fair, priority order for priority-preempt, and
+an incremental release-time index for the EASY-backfill reservation), so a
+scheduling instant costs O(work done) instead of re-sorting all pending
+jobs.  Hook-fed and scan-based scheduling emit byte-identical actions (the
+parity property tests pin this); callers that never bind — e.g. the real
+TACC control loop — keep the original sorting paths.
 """
 from __future__ import annotations
 
+import bisect
+import heapq
 import itertools
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 from repro.core.cluster import Cluster
 from repro.core.compiler import ExecutionPlan
@@ -135,6 +148,58 @@ Action = object
 
 
 # ---------------------------------------------------------------------------
+# Indexed queue views
+# ---------------------------------------------------------------------------
+
+class OrderedJobView:
+    """Sorted, lazily-compacted view over a mutating job set.
+
+    Entries are ``(key(job) + (seq,), job)`` kept sorted by ``bisect.insort``;
+    ``seq`` is the driver-wide admission counter, so ties replay the exact
+    stable-sort order of the scan-based reference (dict insertion order).
+    ``discard`` is O(1) lazy: stale entries are skipped on iteration and the
+    list is compacted once they outnumber the live ones.
+    """
+
+    __slots__ = ("_key", "_entries", "_live")
+
+    def __init__(self, key):
+        self._key = key               # job -> sort-key tuple (seq appended)
+        self._entries: List[tuple] = []
+        self._live: Dict[str, int] = {}      # job_id -> seq of live entry
+
+    def add(self, job: Job, seq: int) -> None:
+        self._live[job.id] = seq
+        bisect.insort(self._entries, (self._key(job) + (seq,), job))
+
+    def discard(self, job_id: str) -> None:
+        if self._live.pop(job_id, None) is None:
+            return
+        if len(self._entries) > 64 and \
+                len(self._entries) > 2 * len(self._live):
+            self._entries = [e for e in self._entries
+                             if self._live.get(e[1].id) == e[0][-1]]
+
+    def __contains__(self, job_id: str) -> bool:
+        return job_id in self._live
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    def items(self):
+        """Yield live ``(sort_key, job)`` in key order (O(1) per step +
+        amortized stale-entry cleanup)."""
+        live = self._live
+        for entry in self._entries:
+            if live.get(entry[1].id) == entry[0][-1]:
+                yield entry
+
+    def jobs(self):
+        for _, job in self.items():
+            yield job
+
+
+# ---------------------------------------------------------------------------
 # Policies
 # ---------------------------------------------------------------------------
 
@@ -151,6 +216,8 @@ class Policy:
         self._tenant_chips: Optional[Dict[str, int]] = None
         self._dirty = True                    # job/cluster state changed since
                                               # the last full rebalance
+        self._queues: Optional[List[OrderedJobView]] = None
+        self._admit_seq = itertools.count()   # shared across all views
 
     # -- incremental driver protocol -----------------------------------------
     # A driver (the simulator or a real control loop) that applies this
@@ -174,34 +241,99 @@ class Policy:
         applied actions (arrival, completion, failure, recovery, rollback)."""
         self._dirty = True
 
-    def _tenant_used(self, tenant: str, running: List[Job]) -> int:
+    # -- indexed queue protocol ----------------------------------------------
+    # A driver that also calls ``bind_queues()`` and then reports every
+    # pending/running transition lets the policy keep ordered queue views, so
+    # ``schedule`` never sorts the full pending set.  The driver MUST then
+    # report *every* transition (add on submit/requeue, remove on start,
+    # started/stopped for the running set, progressed whenever a running
+    # job's settled progress changes) or the views drift from reality.
+
+    def bind_queues(self) -> None:
+        """Opt in to driver-fed ordered queue views (idempotent)."""
+        if self._queues is None:
+            self._queues = self._make_queues()
+
+    def _make_queues(self) -> List[OrderedJobView]:
+        """Build the policy's pending-membership views (subclass hook)."""
+        return []
+
+    def _views_for(self, job: Job) -> Iterable[OrderedJobView]:
+        return self._queues
+
+    def job_added(self, job: Job) -> None:
+        """Driver hook: ``job`` entered the pending queue (new or requeued)."""
+        if self._queues is None:
+            return
+        seq = next(self._admit_seq)
+        for v in self._views_for(job):
+            v.add(job, seq)
+
+    def job_removed(self, job: Job) -> None:
+        """Driver hook: ``job`` left the pending queue (started/terminal)."""
+        if self._queues is None:
+            return
+        for v in self._views_for(job):
+            v.discard(job.id)
+
+    def job_started(self, job: Job) -> None:
+        """Driver hook: ``job`` entered the running set (chips granted)."""
+
+    def job_stopped(self, job: Job) -> None:
+        """Driver hook: ``job`` left the running set."""
+
+    def job_progressed(self, job: Job) -> None:
+        """Driver hook: a running job's settled progress changed (its
+        remaining-time estimate — and any view keyed on it — moved)."""
+
+    def usage_decayed(self, dt: float) -> None:
+        """Driver hook, fired by ``account`` after usage decay/accrual: any
+        view keyed on per-tenant usage shares must re-key.  The built-in
+        FairShare keys its views by (submit_time, seq) *within* a tenant and
+        resolves the cross-tenant share order at schedule time, so it needs
+        no re-keying; the hook is the seam for policies that cache one."""
+
+    def _tenant_used(self, tenant: str, running: Iterable[Job]) -> int:
         if self._tenant_chips is not None:
             return self._tenant_chips.get(tenant, 0)
         return sum(j.chips for j in running if j.tenant == tenant)
 
     # bookkeeping called by the driver with the virtual time elapsed since
     # the last scheduling instant (dt is arbitrary, not a fixed tick)
-    def account(self, dt: float, running: List[Job], decay: float = 0.999):
+    def account(self, dt: float, running: Iterable[Job],
+                decay: float = 0.999):
         for t in self.usage:
             self.usage[t] *= decay ** dt
         if self._tenant_chips is not None:
             for t, c in self._tenant_chips.items():
                 if c:
                     self.usage[t] = self.usage.get(t, 0.0) + c * dt
-            return
-        for j in running:
-            self.usage[j.tenant] = self.usage.get(j.tenant, 0.0) + j.chips * dt
+        else:
+            for j in running:
+                self.usage[j.tenant] = \
+                    self.usage.get(j.tenant, 0.0) + j.chips * dt
+        self.usage_decayed(dt)
 
     def wakeup_interval(self) -> Optional[float]:
         """Seconds between periodic invocations the policy wants even when no
         job/cluster state changes; None = event-driven invocation only."""
         return None
 
-    def _quota_ok(self, job: Job, running: List[Job], chips: int) -> bool:
+    def _quota_ok(self, job: Job, running: Iterable[Job], chips: int,
+                  started: Optional[Dict[str, int]] = None) -> bool:
+        """Would granting ``chips`` keep ``job``'s tenant inside its quota?
+
+        ``started`` accumulates chips granted earlier in this same scheduling
+        instant (per tenant), so one instant cannot overshoot the quota.  With
+        driver-fed aggregates the check is O(1); unbound callers fall back to
+        scanning ``running``.
+        """
         q = self.quotas.get(job.tenant)
         if q is None:
             return True
-        used = sum(j.chips for j in running if j.tenant == job.tenant)
+        used = self._tenant_used(job.tenant, running)
+        if started:
+            used += started.get(job.tenant, 0)
         return used + chips <= q
 
     def schedule(self, now: float, pending: List[Job], running: List[Job],
@@ -212,12 +344,22 @@ class Policy:
 class FIFO(Policy):
     name = "fifo"
 
+    def _make_queues(self):
+        self._arrival = OrderedJobView(lambda j: (j.submit_time,))
+        return [self._arrival]
+
     def schedule(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
-        for job in sorted(pending, key=lambda j: j.submit_time):
-            if job.requested <= free and self._quota_ok(job, running, job.requested):
+        started: Dict[str, int] = {}          # tenant -> chips this instant
+        queue = self._arrival.jobs() if self._queues is not None \
+            else sorted(pending, key=lambda j: j.submit_time)
+        for job in queue:
+            if job.requested <= free and \
+                    self._quota_ok(job, running, job.requested, started):
                 actions.append(Start(job.id, job.requested))
+                started[job.tenant] = \
+                    started.get(job.tenant, 0) + job.requested
                 free -= job.requested
             else:
                 break                      # strict FIFO: no overtaking
@@ -227,28 +369,54 @@ class FIFO(Policy):
 class EASYBackfill(Policy):
     name = "backfill"
 
+    def _make_queues(self):
+        self._arrival = OrderedJobView(lambda j: (j.submit_time,))
+        # release-time index over *running* jobs: keyed by the remaining-time
+        # constant (remaining_estimate(now) = now + key for every job between
+        # progress settlements), fed by job_started/job_stopped/job_progressed
+        self._release = OrderedJobView(lambda j: (j.remaining_estimate(0.0),))
+        return [self._arrival]
+
+    def job_started(self, job):
+        if self._queues is not None:
+            self._release.add(job, next(self._admit_seq))
+
+    def job_stopped(self, job):
+        if self._queues is not None:
+            self._release.discard(job.id)
+
+    def job_progressed(self, job):
+        if self._queues is not None and job.id in self._release:
+            self._release.discard(job.id)
+            self._release.add(job, next(self._admit_seq))
+
     def schedule(self, now, pending, running, cluster):
         actions: List[Action] = []
-        queue = sorted(pending, key=lambda j: j.submit_time)
         free = cluster.free_chips()
-        started: List[Job] = []
-        while queue:
-            head = queue[0]
-            if head.requested <= free and self._quota_ok(head, running + started,
-                                                         head.requested):
-                actions.append(Start(head.id, head.requested))
-                started.append(head)
-                free -= head.requested
-                queue.pop(0)
-                continue
-            break
-        if not queue:
+        started: Dict[str, int] = {}
+        queue = self._arrival.jobs() if self._queues is not None \
+            else iter(sorted(pending, key=lambda j: j.submit_time))
+        head: Optional[Job] = None
+        for job in queue:                  # start the queue head while it fits
+            if job.requested <= free and \
+                    self._quota_ok(job, running, job.requested, started):
+                actions.append(Start(job.id, job.requested))
+                started[job.tenant] = \
+                    started.get(job.tenant, 0) + job.requested
+                free -= job.requested
+            else:
+                head = job
+                break
+        if head is None:
             return actions
-        head = queue[0]
         # reservation: when will enough chips free up for the head job?
-        releases = sorted(
-            (j.remaining_estimate(now), j.chips) for j in running
-            if j.chips > 0)
+        if self._queues is not None:
+            releases = ((now + key[0], job.chips)
+                        for key, job in self._release.items())
+        else:
+            releases = iter(sorted(
+                (j.remaining_estimate(now), j.chips) for j in running
+                if j.chips > 0))
         avail = free
         reserve_at = float("inf")
         for t_rel, chips in releases:
@@ -259,14 +427,17 @@ class EASYBackfill(Policy):
         # backfill: a later job may start iff it fits now AND finishes
         # before the reservation (or uses chips the head doesn't need)
         shadow_free = free
-        for job in queue[1:]:
+        for job in queue:                  # continues after the head
+            if shadow_free == 0:
+                break
             fits = job.requested <= shadow_free
             ends_before = now + job.spec.estimated_duration_s <= reserve_at
             spare = shadow_free - head.requested >= job.requested
             if fits and (ends_before or spare) and \
-                    self._quota_ok(job, running + started, job.requested):
+                    self._quota_ok(job, running, job.requested, started):
                 actions.append(Start(job.id, job.requested))
-                started.append(job)
+                started[job.tenant] = \
+                    started.get(job.tenant, 0) + job.requested
                 shadow_free -= job.requested
         return actions
 
@@ -274,20 +445,46 @@ class EASYBackfill(Policy):
 class FairShare(Policy):
     name = "fair"
 
+    def _make_queues(self):
+        self._tenant_views: Dict[str, OrderedJobView] = {}
+        return []                          # views are created per tenant
+
+    def _views_for(self, job):
+        view = self._tenant_views.get(job.tenant)
+        if view is None:
+            view = self._tenant_views[job.tenant] = \
+                OrderedJobView(lambda j: (j.submit_time,))
+        return (view,)
+
+    def _share(self, tenant: str) -> float:
+        w = self.weights.get(tenant, 1.0)
+        return self.usage.get(tenant, 0.0) / max(w, 1e-9)
+
     def schedule(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
-        started: List[Job] = []
-
-        def share(job: Job) -> float:
-            w = self.weights.get(job.tenant, 1.0)
-            return self.usage.get(job.tenant, 0.0) / max(w, 1e-9)
-
-        for job in sorted(pending, key=lambda j: (share(j), j.submit_time)):
+        started: Dict[str, int] = {}
+        if self._queues is not None:
+            # k-way merge of the per-tenant arrival views, keyed by the
+            # tenant's *current* share: identical order to the scan-based
+            # stable sort, at O(scanned * log tenants)
+            def stream(share, view):
+                return ((share + key, job) for key, job in view.items())
+            streams = [stream((self._share(t),), view)
+                       for t, view in self._tenant_views.items() if view]
+            queue = (job for _, job in heapq.merge(*streams))
+        else:
+            queue = iter(sorted(
+                pending,
+                key=lambda j: (self._share(j.tenant), j.submit_time)))
+        for job in queue:
+            if free == 0:
+                break                      # nothing can start any more
             if job.requested <= free and \
-                    self._quota_ok(job, running + started, job.requested):
+                    self._quota_ok(job, running, job.requested, started):
                 actions.append(Start(job.id, job.requested))
-                started.append(job)
+                started[job.tenant] = \
+                    started.get(job.tenant, 0) + job.requested
                 free -= job.requested
         return actions
 
@@ -295,30 +492,49 @@ class FairShare(Policy):
 class PriorityPreempt(Policy):
     name = "priority"
 
+    def _make_queues(self):
+        self._prio = OrderedJobView(lambda j: (-j.priority, j.submit_time))
+        return [self._prio]
+
     def schedule(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
         preempted: set = set()
-        started: List[Job] = []
-        for job in sorted(pending, key=lambda j: (-j.priority, j.submit_time)):
-            if not self._quota_ok(job, running + started, job.requested):
+        started: Dict[str, int] = {}
+        queue = self._prio.jobs() if self._queues is not None \
+            else iter(sorted(pending,
+                             key=lambda j: (-j.priority, j.submit_time)))
+        victims: Optional[List[Job]] = None   # sorted once, on first demand
+        floor: Optional[float] = None         # lowest preemptible priority
+        for job in queue:
+            if not self._quota_ok(job, running, job.requested, started):
                 continue
             if job.requested <= free:
                 actions.append(Start(job.id, job.requested))
-                started.append(job)
+                started[job.tenant] = \
+                    started.get(job.tenant, 0) + job.requested
                 free -= job.requested
                 continue
             # try checkpoint-then-preempt of strictly lower-priority jobs
-            victims = sorted(
-                (j for j in running
-                 if j.priority < job.priority and j.id not in preempted
-                 and j.spec.resources.preemptible),
-                key=lambda j: (j.priority,
-                               -j.start_time if j.start_time is not None
-                               else 0.0))
+            if floor is None:
+                floor = min((j.priority for j in running
+                             if j.spec.resources.preemptible),
+                            default=float("inf"))
+            if job.priority <= floor:
+                if free == 0 and floor == float("inf"):
+                    break                  # no fit and nothing preemptible
+                continue                   # no strictly-lower victims exist
+            if victims is None:
+                victims = sorted(
+                    (j for j in running if j.spec.resources.preemptible),
+                    key=lambda j: (j.priority,
+                                   -j.start_time if j.start_time is not None
+                                   else 0.0))
             gain = free
             chosen = []
             for v in victims:
+                if v.priority >= job.priority or v.id in preempted:
+                    continue
                 chosen.append(v)
                 gain += v.chips
                 if gain >= job.requested:
@@ -328,7 +544,8 @@ class PriorityPreempt(Policy):
                     actions.append(Preempt(v.id))
                     preempted.add(v.id)
                 actions.append(Start(job.id, job.requested))
-                started.append(job)
+                started[job.tenant] = \
+                    started.get(job.tenant, 0) + job.requested
                 free = gain - job.requested
         return actions
 
@@ -346,6 +563,10 @@ class GoodputElastic(Policy):
     def wakeup_interval(self):
         return self.rebalance_every
 
+    def _make_queues(self):
+        self._arrival = OrderedJobView(lambda j: (j.submit_time,))
+        return [self._arrival]
+
     def _admit_only(self, pending, running, cluster):
         """Between rebalances: start new arrivals into *free* capacity only.
         Resizes/preemptions of running jobs wait for the cadence, so a
@@ -355,7 +576,11 @@ class GoodputElastic(Policy):
         if not pending or free <= 0:
             return actions
         granted: Dict[str, int] = {}          # tenant -> chips this round
-        for j in sorted(pending, key=lambda j: j.submit_time):
+        queue = self._arrival.jobs() if self._queues is not None \
+            else sorted(pending, key=lambda j: j.submit_time)
+        for j in queue:
+            if free <= 0:
+                break
             need = j.min_chips if j.elastic else j.requested
             if not 0 < need <= free:
                 continue
@@ -384,7 +609,7 @@ class GoodputElastic(Policy):
         if self._tenant_chips is not None and not self._dirty:
             return []
         self._dirty = False
-        jobs = [j for j in running + pending
+        jobs = [j for j in itertools.chain(running, pending)
                 if j.state in (JobState.RUNNING, JobState.PENDING)]
         if not jobs:
             return []
@@ -398,7 +623,6 @@ class GoodputElastic(Policy):
                 grant[j.id] = need
                 budget -= need
         # greedy marginal goodput on elastic jobs
-        import heapq
         heap = []
         for j in jobs:
             if j.elastic and grant[j.id] and grant[j.id] < j.requested:

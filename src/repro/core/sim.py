@@ -6,6 +6,14 @@ node-failure restart from the last checkpoint, straggler detection +
 drain/reallocate, elastic resizes. Used by the scheduler benchmarks (the
 paper's shared-cluster-efficiency claims) and by the property tests.
 
+The sim binds the policy's full incremental driver protocol
+(``bind_incremental`` + ``bind_queues``) and feeds the queue hooks at every
+transition — ``job_added`` on submit/requeue, ``job_removed``/``job_started``
+on start, ``job_stopped`` on completion/failure/preemption, and
+``job_progressed`` whenever settled progress moves — so policies schedule
+off ordered indexed views instead of re-sorting the pending set each
+instant (see ``core/scheduler.py``).
+
 Two engines share the same workload API, action application and metrics:
 
 ``event`` (default)
@@ -83,6 +91,7 @@ class ClusterSim:
         self.cluster = cluster
         self.policy = policy
         self.policy.bind_incremental()
+        self.policy.bind_queues()
         self.cfg = cfg
         self.now = 0.0
         self.jobs: Dict[str, Job] = {}
@@ -103,18 +112,28 @@ class ClusterSim:
         self._acct_t = 0.0
         self._n_external = 0                  # arrivals+injects still queued
         self._event_mode = False
+        self._workload_dirty = False          # unsorted submits/injects
 
     # -- workload ------------------------------------------------------------
+    # submit/inject only append: sorting a 50k-job month trace once per
+    # submission is O(n^2); the event engine heap-orders everything anyway
+    # and the tick engine sorts lazily on its next step.
 
     def submit(self, job: Job, at: Optional[float] = None) -> None:
         t = job.submit_time if at is None else at
         job.submit_time = t
         self._arrivals.append((t, job))
-        self._arrivals.sort(key=lambda x: x[0])
+        self._workload_dirty = True
 
     def inject(self, event: SimEvent) -> None:
         self.pending_events.append(event)
-        self.pending_events.sort(key=lambda e: e.time)
+        self._workload_dirty = True
+
+    def _sort_workload(self) -> None:
+        if self._workload_dirty:
+            self._arrivals.sort(key=lambda x: x[0])
+            self.pending_events.sort(key=lambda e: e.time)
+            self._workload_dirty = False
 
     # -- helpers -------------------------------------------------------------
 
@@ -128,6 +147,7 @@ class ClusterSim:
         self.jobs[job.id] = job
         self._pending_jobs[job.id] = job
         self.policy.note_change()
+        self.policy.job_added(job)
         self._log(job, "submitted")
 
     def _log(self, job: Job, msg: str) -> None:
@@ -147,6 +167,8 @@ class ClusterSim:
         self._pending_jobs.pop(job.id, None)
         self._running_jobs[job.id] = job
         self.policy.grant_delta(job.tenant, chips)
+        self.policy.job_removed(job)
+        self.policy.job_started(job)
         job.start_time = self.now
         if job.first_start is None:
             job.first_start = self.now
@@ -175,10 +197,12 @@ class ClusterSim:
         self.policy.grant_delta(job.tenant, -job.chips)
         self.policy.note_change()
         self._running_jobs.pop(job.id, None)
+        self.policy.job_stopped(job)
         job.chips = 0
         job.state = state
         if state == JobState.PENDING:
             self._pending_jobs[job.id] = job
+            self.policy.job_added(job)
         self._log(job, f"stop -> {state.value} {reason}")
 
     def _apply(self, actions) -> None:
@@ -211,9 +235,11 @@ class ClusterSim:
                         if alloc is None:
                             self.policy.grant_delta(job.tenant, -job.chips)
                             self._running_jobs.pop(job.id, None)
+                            self.policy.job_stopped(job)
                             job.state = JobState.PENDING
                             job.chips = 0
                             self._pending_jobs[job.id] = job
+                            self.policy.job_added(job)
                             if self._event_mode:
                                 self._clock.pop(job.id, None)
                                 self._gen[job.id] = \
@@ -294,6 +320,7 @@ class ClusterSim:
     def step(self) -> None:
         """One fixed tick of the legacy engine (parity oracle)."""
         dt = self.cfg.tick
+        self._sort_workload()
         # arrivals
         while self._arrivals and self._arrivals[0][0] <= self.now:
             _, job = self._arrivals.pop(0)
@@ -317,6 +344,7 @@ class ClusterSim:
             sps = job.steps_per_s(job.chips,
                                   self.cluster.crosses_pods(job.id))
             job.progress += dt * sps * self.cluster.job_speed(job.id)
+            self.policy.job_progressed(job)
             if job.progress >= job.total_steps:
                 job.progress = job.total_steps
                 job.end_time = self.now
@@ -342,6 +370,7 @@ class ClusterSim:
         if dt > 0 and clk.rate > 0:
             job.progress = min(float(job.total_steps),
                                job.progress + dt * clk.rate)
+            self.policy.job_progressed(job)
         clk.accrue_from = self.now
 
     def _resched(self, job: Job) -> None:
@@ -424,18 +453,25 @@ class ClusterSim:
             self._straggler_sweep()
         dt = self.now - self._acct_t
         self._acct_t = self.now
-        self.policy.account(dt, self._running())
-        self._apply(self.policy.schedule(self.now, self._pending(),
-                                         self._running(), self.cluster))
+        # pass the live-set dict views directly: with bound queue hooks the
+        # policy never materializes them, so an instant with a deep pending
+        # queue (e.g. a head-blocked FIFO month trace) stays O(work done)
+        # instead of O(live jobs) just to build throwaway lists
+        pending, running = self._pending_jobs.values(), \
+            self._running_jobs.values()
+        self.policy.account(dt, running)
+        self._apply(self.policy.schedule(self.now, pending, running,
+                                         self.cluster))
         # a fresh allocation may have landed on a slow node; requeue it now
         # (the tick engine would catch this on its next step)
         if self.cfg.straggler_mitigation and self._straggler_sweep():
-            self._apply(self.policy.schedule(self.now, self._pending(),
-                                             self._running(), self.cluster))
+            self._apply(self.policy.schedule(self.now, pending, running,
+                                             self.cluster))
 
     def _run_events(self, until: float) -> Dict[str, float]:
         self._event_mode = True
         self._acct_t = self.now
+        self._sort_workload()   # same-instant ties keep submission order
         for t, job in self._arrivals:
             self._push(t, "arrival", job)
             self._n_external += 1

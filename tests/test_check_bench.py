@@ -1,0 +1,95 @@
+"""Tier-1 wiring for the BENCH_scheduler.json regression gate.
+
+Exercises the comparison logic of ``benchmarks/check_bench.py`` on synthetic
+snapshots (fast, machine-independent) plus the CLI plumbing.  The wall gate
+is deliberately NOT asserted against live timings here — re-running benches
+on a loaded machine must never flake tier-1; CI applies it via the CLI after
+a fresh bench run.
+"""
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+import check_bench  # noqa: E402
+
+
+def snap(**results):
+    return {"points": {"default": {"results": results}}}
+
+
+BASE = snap(
+    fifo={"avg_jct": 100.0, "completed": 60.0, "wall_s": 1.0},
+    goodput={"avg_jct": 200.0, "completed": 60.0, "wall_s": 2.0},
+)
+
+
+def test_identical_snapshots_pass():
+    assert check_bench.compare_snapshots(BASE, copy.deepcopy(BASE)) == []
+
+
+def test_wall_regression_fails_beyond_rel_and_floor():
+    cand = copy.deepcopy(BASE)
+    cand["points"]["default"]["results"]["fifo"]["wall_s"] = 1.3
+    out = check_bench.compare_snapshots(BASE, cand)
+    assert len(out) == 1 and "wall_s regressed" in out[0]
+    # under the 20% gate: fine
+    cand["points"]["default"]["results"]["fifo"]["wall_s"] = 1.15
+    assert check_bench.compare_snapshots(BASE, cand) == []
+    # over 20% but under the absolute noise floor: fine (tiny timers)
+    small = snap(fifo={"wall_s": 0.1})
+    small_cand = snap(fifo={"wall_s": 0.2})
+    assert check_bench.compare_snapshots(small, small_cand) == []
+    # wall gate can be disabled outright
+    cand["points"]["default"]["results"]["fifo"]["wall_s"] = 9.9
+    assert check_bench.compare_snapshots(BASE, cand, check_wall=False) == []
+
+
+def test_exact_policies_fail_on_any_metric_drift():
+    cand = copy.deepcopy(BASE)
+    cand["points"]["default"]["results"]["fifo"]["avg_jct"] = 100.0001
+    out = check_bench.compare_snapshots(BASE, cand)
+    assert len(out) == 1 and "avg_jct drifted" in out[0]
+
+
+def test_tolerant_policies_allow_small_drift_only():
+    cand = copy.deepcopy(BASE)
+    cand["points"]["default"]["results"]["goodput"]["avg_jct"] = 206.0
+    assert check_bench.compare_snapshots(BASE, cand) == []      # 3% < 5%
+    cand["points"]["default"]["results"]["goodput"]["avg_jct"] = 222.0
+    out = check_bench.compare_snapshots(BASE, cand)
+    assert len(out) == 1 and "goodput" in out[0]
+
+
+def test_new_points_and_policies_are_ignored():
+    cand = copy.deepcopy(BASE)
+    cand["points"]["month-50k"] = {"results": {"fifo": {"avg_jct": 1.0}}}
+    cand["points"]["default"]["results"]["fair"] = {"avg_jct": 1.0}
+    assert check_bench.compare_snapshots(BASE, cand) == []
+
+
+def test_cli_roundtrip(tmp_path):
+    base_p, cand_p = tmp_path / "base.json", tmp_path / "cand.json"
+    base_p.write_text(json.dumps(BASE))
+    cand = copy.deepcopy(BASE)
+    cand["points"]["default"]["results"]["fifo"]["avg_jct"] = 50.0
+    cand_p.write_text(json.dumps(cand))
+    assert check_bench.main(["--baseline", str(base_p),
+                             "--candidate", str(base_p)]) == 0
+    assert check_bench.main(["--baseline", str(base_p),
+                             "--candidate", str(cand_p)]) == 1
+
+
+def test_git_baseline_loads_committed_snapshot():
+    """`--baseline git:HEAD` must parse the committed snapshot (skips when
+    git/HEAD is unavailable, e.g. a tarball checkout)."""
+    try:
+        base = check_bench.load_baseline("git:HEAD")
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        pytest.skip("no git HEAD snapshot available")
+    assert "points" in base and "default" in base["points"]

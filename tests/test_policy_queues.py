@@ -1,0 +1,261 @@
+"""Parity properties for the O(log n) scheduling layer.
+
+The indexed pending-queue views (``Policy.bind_queues`` + driver hooks) and
+the bucketed free-list placement (``Cluster._take``) are pure perf layers:
+they must emit byte-identical decisions to the sort-based references they
+replaced.  These tests pin that on randomized traces / operation sequences,
+plus regressions for the satellite bugfixes (within-instant quota
+accounting, straggler-median pick).
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import (Cluster, ClusterSim, Job, JobState, ResourceSpec,
+                        RuntimeEnv, SimConfig, Start, TaskSpec, make_policy)
+from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.core.scheduler import OrderedJobView
+from repro.data.trace import TraceConfig, horizon, synthesize
+
+ALL_POLICIES = ["fifo", "backfill", "fair", "priority", "goodput"]
+
+
+def mkcompiler(root):
+    return TaskCompiler(ArtifactStore(str(root / "cas")), str(root / "work"))
+
+
+def mkjob(compiler, name, chips, steps=100, *, tenant="t", priority=0,
+          min_chips=0, submit=0.0, preemptible=True):
+    spec = TaskSpec(
+        name=name, tenant=tenant,
+        resources=ResourceSpec(chips=chips, min_chips=min_chips,
+                               priority=priority, preemptible=preemptible),
+        runtime=RuntimeEnv(backend="shell"),
+        entry={"work_per_step": chips * 0.9, "comm_frac": 0.05},
+        total_steps=steps, estimated_duration_s=steps)
+    return Job(id=name, plan=compiler.compile(spec), submit_time=submit)
+
+
+def small_cluster():
+    return Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)   # 32 chips
+
+
+def parity_trace_cfg(seed):
+    """Churn-heavy little workload: elastic resizes, priorities, rack
+    failures, stragglers — every hook path gets exercised."""
+    return TraceConfig(n_jobs=30, seed=seed, mean_gap_s=20.0,
+                       widths=(4, 4, 8, 8, 16, 32), steps_min=40,
+                       steps_max=200, elastic_frac=0.4, priority_frac=0.2,
+                       n_failures=2, rack_failure_frac=0.5, rack_size=2,
+                       n_stragglers=2, ops_start=50.0, ops_window=600.0,
+                       recover_s=(60.0, 120.0), slow_duration_s=(60.0, 150.0))
+
+
+def run_traced(tmp_path, policy, seed, *, indexed, engine="event"):
+    comp = mkcompiler(tmp_path / f"{policy}-{seed}-{indexed}-{engine}")
+    c = small_cluster()
+    pol = make_policy(policy, quotas={"lab-c": 16},
+                      tenant_weights={"lab-a": 2, "lab-b": 1, "lab-c": 1})
+    if not indexed:
+        pol.bind_queues = lambda: None        # force the sort-based reference
+    sim = ClusterSim(c, pol, SimConfig(
+        tick=2.0, checkpoint_interval_s=30, checkpoint_cost_s=2,
+        restart_cost_s=10, engine=engine))
+    tr = synthesize(parity_trace_cfg(seed), list(c.nodes))
+    tr.install(sim, comp)
+    metrics = sim.run(until=horizon(tr))
+    return metrics, sim.trace
+
+
+# -- indexed queues vs sort-based reference ------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_indexed_queues_match_sorting_reference(tmp_path, policy, seed):
+    """With queue hooks bound, every policy must emit the exact action
+    stream (hence the exact event trace and metrics) of the full-sort
+    reference on a randomized failure-heavy trace."""
+    m_idx, t_idx = run_traced(tmp_path, policy, seed, indexed=True)
+    m_ref, t_ref = run_traced(tmp_path, policy, seed, indexed=False)
+    assert t_idx == t_ref
+    assert m_idx == m_ref
+
+
+@pytest.mark.parametrize("policy", ["backfill", "fair"])
+def test_indexed_queues_match_reference_on_tick_engine(tmp_path, policy):
+    """The hooks also fire from the legacy tick engine (per-tick progress
+    feeds the backfill release index); parity must hold there too."""
+    m_idx, t_idx = run_traced(tmp_path, policy, 3, indexed=True,
+                              engine="tick")
+    m_ref, t_ref = run_traced(tmp_path, policy, 3, indexed=False,
+                              engine="tick")
+    assert t_idx == t_ref
+    assert m_idx == m_ref
+
+
+def test_ordered_view_iterates_in_key_order_with_lazy_discard(tmp_path):
+    comp = mkcompiler(tmp_path)
+    view = OrderedJobView(lambda j: (j.submit_time,))
+    jobs = [mkjob(comp, f"j{i}", 4, submit=float((7 * i) % 10))
+            for i in range(10)]
+    for seq, j in enumerate(jobs):
+        view.add(j, seq)
+    assert [j.submit_time for j in view.jobs()] == \
+        sorted(j.submit_time for j in jobs)
+    for j in jobs[::2]:
+        view.discard(j.id)
+    view.discard("no-such-job")           # no-op
+    assert len(view) == 5
+    got = list(view.jobs())
+    assert got == sorted(jobs[1::2], key=lambda j: j.submit_time)
+    # re-add with a fresh seq: exactly one live entry wins
+    view.add(jobs[0], 99)
+    assert jobs[0].id in view
+    assert sum(1 for j in view.jobs() if j.id == jobs[0].id) == 1
+
+
+# -- bucketed free-list placement vs node-sort reference -----------------------
+
+def reference_allocate(cluster, chips, prefer_single_pod=True):
+    """The pre-bucketing placement: sort every node by (-free, id)."""
+    if chips > cluster.free_chips():
+        return None
+    pods = sorted(range(cluster.n_pods), key=lambda p: -cluster.free_chips(p))
+    if prefer_single_pod:
+        for p in pods:
+            if cluster.free_chips(p) >= chips:
+                return _reference_take(cluster, chips, [p])
+    return _reference_take(cluster, chips, pods)
+
+
+def _reference_take(cluster, chips, pods):
+    picked, need = [], chips
+    for p in pods:
+        nodes = sorted((n for n in cluster.nodes.values()
+                        if n.pod == p and n.free > 0),
+                       key=lambda n: (-n.free, n.id))
+        for n in nodes:
+            take = min(n.free, need)
+            picked.append((n.id, take))
+            need -= take
+            if need == 0:
+                return picked
+    return picked if need == 0 else None
+
+
+def test_bucketed_take_matches_node_sort_reference():
+    """Randomized allocate/release/fail/recover/drain churn: the bucketed
+    pick must equal the brute-force sorted pick at every allocation, and
+    the incremental counters must stay consistent throughout."""
+    rng = random.Random(1234)
+    cluster = Cluster(n_pods=2, hosts_per_pod=8, chips_per_host=4)
+    nodes = list(cluster.nodes)
+    live, seq = [], 0
+    for step in range(600):
+        op = rng.random()
+        if op < 0.45:
+            chips = rng.choice((1, 2, 3, 4, 8, 16, 24, 32, 48))
+            prefer = rng.random() < 0.8
+            expect = reference_allocate(cluster, chips, prefer)
+            jid = f"j{seq}"
+            seq += 1
+            got = cluster.try_allocate(jid, chips, prefer)
+            assert got == expect, (step, chips, prefer)
+            if got is not None:
+                live.append(jid)
+        elif op < 0.7 and live:
+            cluster.release(live.pop(rng.randrange(len(live))))
+        elif op < 0.8:
+            nid = rng.choice(nodes)
+            for jid in cluster.fail_node(nid):
+                cluster.release(jid)
+                live.remove(jid)
+        elif op < 0.9:
+            cluster.recover_node(rng.choice(nodes))
+        else:
+            cluster.drain(rng.choice(nodes), rng.random() < 0.5)
+        if step % 25 == 0:
+            cluster.check_counters()
+    cluster.check_counters()
+
+
+def test_used_chips_counter_is_consistent():
+    c = small_cluster()
+    assert c.used_chips() == 0
+    c.try_allocate("a", 10)
+    c.try_allocate("b", 5)
+    assert c.used_chips() == 15
+    c.fail_node("pod0/host000")
+    c.release("a")
+    assert c.used_chips() == sum(n.used for n in c.nodes.values())
+    c.recover_node("pod0/host000")
+    c.release("b")
+    assert c.used_chips() == 0
+    c.check_counters()
+
+
+# -- satellite bugfix regressions ----------------------------------------------
+
+def test_fifo_quota_holds_within_one_instant(tmp_path):
+    """Two same-tenant jobs that both fit free capacity but jointly bust the
+    tenant quota must not start in the same scheduling instant (the pre-fix
+    FIFO only counted already-running jobs)."""
+    comp = mkcompiler(tmp_path)
+    c = small_cluster()
+    pol = make_policy("fifo", quotas={"t": 12})
+    a = mkjob(comp, "a", 8, submit=0.0)
+    b = mkjob(comp, "b", 8, submit=0.0)
+    acts = pol.schedule(0.0, [a, b], [], c)
+    starts = [x for x in acts if isinstance(x, Start)]
+    assert [s.job_id for s in starts] == ["a"]     # b waits for headroom
+    # and end-to-end through the simulator (indexed path): never > quota
+    sim = ClusterSim(small_cluster(), make_policy("fifo", quotas={"t": 12}),
+                     SimConfig())
+    sim.submit(mkjob(comp, "x", 8, 50, submit=0.0))
+    sim.submit(mkjob(comp, "y", 8, 50, submit=0.0))
+    sim.run()
+    x, y = sim.jobs["x"], sim.jobs["y"]
+    assert x.state == y.state == JobState.COMPLETED
+    assert y.first_start >= x.end_time          # serialized by the quota
+
+
+@pytest.mark.parametrize("policy", ["backfill", "fair", "priority"])
+def test_started_chips_count_against_quota(tmp_path, policy):
+    """The old `running + started` accumulation summed pending jobs at
+    chips=0 — a silent no-op.  All policies now track granted chips."""
+    comp = mkcompiler(tmp_path)
+    c = small_cluster()
+    pol = make_policy(policy, quotas={"t": 12})
+    jobs = [mkjob(comp, f"j{i}", 8, submit=float(i)) for i in range(3)]
+    acts = pol.schedule(5.0, jobs, [], c)
+    starts = [a for a in acts if isinstance(a, Start)]
+    assert len(starts) == 1                     # 8 + 8 > 12: one start only
+
+
+def test_straggler_median_interpolates_even_gangs():
+    """Even-length speed lists take the true (interpolated) median, not the
+    upper middle element: with half a 4-node gang mildly slow, the inflated
+    old median flagged nodes that are within threshold of the gang's true
+    center."""
+    c = small_cluster()
+    assert c.try_allocate("j", 16) is not None     # 4 nodes in pod0
+    nodes = c.job_nodes("j")
+    # two of four nodes at 0.7: true median = (0.7 + 1.0)/2 = 0.85, so the
+    # 0.75 threshold bound is 0.6375 and 0.7 is NOT a straggler — the old
+    # upper-element median (1.0, bound 0.75) wrongly drained both nodes
+    for nid in nodes[:2]:
+        c.set_speed(nid, 0.7)
+    assert c.straggler_nodes("j", threshold=0.75) == []
+    # at 0.5 the nodes are below even the interpolated bound
+    # (0.75 * (0.5 + 1.0)/2 = 0.5625) and must still be flagged
+    for nid in nodes[:2]:
+        c.set_speed(nid, 0.5)
+    assert sorted(c.straggler_nodes("j", threshold=0.75)) == \
+        sorted(nodes[:2])
+    # odd-length gangs keep the exact middle element
+    c.release("j")
+    assert c.try_allocate("k", 12) is not None     # 3 nodes
+    k_nodes = c.job_nodes("k")
+    c.set_speed(k_nodes[0], 0.2)
+    assert c.straggler_nodes("k", threshold=0.75) == [k_nodes[0]]
