@@ -33,11 +33,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import gc
 import json
 import os
 import tempfile
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.compiler import ArtifactStore, TaskCompiler
@@ -58,6 +59,22 @@ def artifact_path(trace_dir: str, name: str, seed: int) -> str:
     return os.path.join(trace_dir, f"{name}-seed{seed}.json.gz")
 
 
+def config_matches(artifact_config, cfg: TraceConfig) -> bool:
+    """Does an artifact's embedded config equal ``cfg``?  Keys the artifact
+    predates (TraceConfig fields added after it was committed, e.g. the
+    ``reliability`` model) are filled with dataclass defaults, so old
+    artifacts keep replaying as long as the new knobs are at their
+    defaults — exactly the cases where the synthesis is unchanged."""
+    if artifact_config is None:
+        return False
+    # normalize through JSON: artifact meta holds lists where the
+    # dataclass has tuples
+    want = json.loads(json.dumps(dataclasses.asdict(cfg)))
+    defaults = json.loads(json.dumps(dataclasses.asdict(TraceConfig())))
+    merged = {**defaults, **artifact_config}
+    return merged == want
+
+
 def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
               overridden: bool, save: bool) -> Trace:
     """Load the committed trace artifact when it matches ``cfg``; otherwise
@@ -67,10 +84,7 @@ def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
     path = artifact_path(trace_dir, name, seed)
     if not overridden and not save and os.path.exists(path):
         trace = Trace.load(path)
-        # normalize through JSON: artifact meta holds lists where the
-        # dataclass has tuples
-        want = json.loads(json.dumps(dataclasses.asdict(cfg)))
-        if trace.meta.get("config") == want:
+        if config_matches(trace.meta.get("config"), cfg):
             return trace
         print(f"  [trace artifact {os.path.basename(path)} is stale "
               f"(config mismatch); resynthesizing]")
@@ -82,18 +96,23 @@ def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
     return trace
 
 
-def run_policy(policy: str, traces: List[Trace],
-               engine: str = "event") -> Dict:
+def run_policy(policy: str, traces: List[Trace], engine: str = "event",
+               reliability_aware: bool = False) -> Dict:
     agg: Dict[str, float] = {}
     wall = 0.0
     for trace in traces:
+        # collect the (cyclic) sim/job graphs of earlier runs up front: at
+        # month scale the gen-2 collections they otherwise trigger land in
+        # whichever policy runs last and skew its wall by tens of percent
+        gc.collect()
         with tempfile.TemporaryDirectory() as td:
             compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
             cluster = make_cluster()
             pol = make_policy(policy,
                               quotas={"lab-c": 192},
                               tenant_weights={"lab-a": 2, "lab-b": 1,
-                                              "lab-c": 1})
+                                              "lab-c": 1},
+                              reliability_aware=reliability_aware)
             sim = ClusterSim(cluster, pol, SimConfig(
                 tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
                 restart_cost_s=15, engine=engine))
@@ -110,34 +129,59 @@ def run_policy(policy: str, traces: List[Trace],
 def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
               seeds, engine: str, trace_dir: str = DEFAULT_TRACE_DIR,
               overridden: bool = False, save_traces: bool = False) -> Dict:
+    # points synthesized under the age-dependent failure model run
+    # reliability-aware policies (failure-aware placement + survival-weighted
+    # goodput); memoryless points keep the default behavior byte-identical
+    reliability_aware = trace_cfg.reliability is not None
     print(f"\n== scale point {name!r}: {trace_cfg.n_jobs} jobs, "
           f"diurnal={trace_cfg.diurnal_amplitude}, "
           f"rack_failure_frac={trace_cfg.rack_failure_frac}, "
+          f"reliability={'age-model' if reliability_aware else 'memoryless'}, "
           f"seeds={list(seeds)} ==")
     traces = [get_trace(name, trace_cfg, seed, trace_dir, overridden,
                         save_traces) for seed in seeds]
     print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
           f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
-          f"{'preempt':>8s} {'restarts':>8s} {'wall_s':>8s}")
+          f"{'preempt':>8s} {'restarts':>8s} {'mttf_h':>8s} "
+          f"{'repair_h':>8s} {'avoided':>7s} {'wall_s':>8s}")
     rows: List[Tuple[str, Dict]] = []
     for pol in policies:
-        m = run_policy(pol, traces, engine=engine)
+        m = run_policy(pol, traces, engine=engine,
+                       reliability_aware=reliability_aware)
         rows.append((pol, m))
         print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
               f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
               f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
-              f"{m['restarts']:8.1f} {m['wall_s']:8.3f}")
+              f"{m['restarts']:8.1f} {m['mttf_hours']:8.1f} "
+              f"{m['repair_hours']:8.2f} {m['restarts_avoided']:7.1f} "
+              f"{m['wall_s']:8.3f}")
     return {
         "n_jobs": trace_cfg.n_jobs,
         "seeds": list(seeds),
         "diurnal_amplitude": trace_cfg.diurnal_amplitude,
         "rack_failure_frac": trace_cfg.rack_failure_frac,
+        "reliability_aware": reliability_aware,
         "total_wall_s": sum(m["wall_s"] for _, m in rows),
         "results": {pol: m for pol, m in rows},
     }
 
 
 TRACE_HELP = """\
+reliability metrics columns (also keys in BENCH_scheduler.json results):
+  failures          node-failure events applied (fail_node + incident)
+  mttf_hours        observed fleet MTTF: node-hours of sim time / failures
+  repair_hours      summed sampled repair time of age-model incidents
+  restarts_avoided  failures that hit a node with no running job — with
+                    failure-aware placement, restarts that never happened
+  admission_rate_<tenant>
+                    share of the tenant's submissions that got chips at
+                    least once during the run
+  Points whose trace preset carries a `reliability` (age-model) config run
+  every policy reliability-aware: long+wide gangs are placed on the most
+  reliable pods/nodes and goodput weights grants by pod locality x survival
+  probability over the predicted remaining runtime.  Memoryless presets
+  replay byte-identically to previous snapshots.
+
 trace-artifact replay workflow:
   Scale points replay committed artifacts from --trace-dir
   (<preset>-seed<N>.json.gz, written with --save-traces) whenever the

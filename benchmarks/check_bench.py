@@ -18,9 +18,16 @@ Intended wiring: CI (or a developer) re-runs ``bench_scheduler.py`` and then
 ``python benchmarks/check_bench.py`` before committing the refreshed
 snapshot; ``tests/test_check_bench.py`` keeps the comparison logic itself
 under tier-1 (metric gate only — wall noise on shared machines must not
-flake the default test run).
+flake the default test run).  ``.github/workflows/ci.yml`` runs it with
+``--json --no-wall`` (the machine-independent metric gate); the wall gate
+only means something against a baseline recorded on the same machine, so
+it is the *local* pre-commit check, not a CI one.
 
-Exit status: 0 = within tolerance, 1 = violations (printed one per line).
+Exit status: 0 = within tolerance, 1 = violations (printed one per line),
+2 = a snapshot is missing/unreadable (candidate not benched yet, or no
+committed baseline).  ``--json`` emits a machine-readable result object
+(``{"status", "violations", "points_compared", ...}``) on stdout instead of
+the human-readable lines, so a CI step can annotate each violation.
 """
 from __future__ import annotations
 
@@ -89,6 +96,24 @@ def compare_snapshots(base: Dict, cand: Dict, *,
     return violations
 
 
+EXIT_OK = 0
+EXIT_REGRESSION = 1
+EXIT_MISSING_SNAPSHOT = 2
+
+
+def _emit(as_json: bool, result: Dict) -> None:
+    if as_json:
+        print(json.dumps(result, indent=1, sort_keys=True))
+        return
+    for v in result["violations"]:
+        print(f"FAIL {v}")
+    if result["status"] == "missing-snapshot":
+        print(f"MISSING {result['detail']}")
+    elif result["status"] == "ok":
+        print(f"ok: {result['points_compared']} scale point(s) within "
+              f"tolerance ({result['baseline']} vs {result['candidate']})")
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--candidate", default=DEFAULT_CANDIDATE,
@@ -97,19 +122,37 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="baseline snapshot: a path or git:<rev> "
                          "(default: git:HEAD)")
     ap.add_argument("--no-wall", action="store_true",
-                    help="skip the wall_s gate (metric drift only)")
+                    help="skip the wall_s gate (metric drift only; the "
+                         "machine-independent mode CI uses on PRs)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable result object on stdout")
     args = ap.parse_args(argv)
-    base = load_baseline(args.baseline)
-    with open(args.candidate) as f:
-        cand = json.load(f)
+    result: Dict = {"baseline": args.baseline, "candidate": args.candidate,
+                    "violations": [], "points_compared": 0}
+    try:
+        base = load_baseline(args.baseline)
+    except (FileNotFoundError, subprocess.CalledProcessError,
+            json.JSONDecodeError) as e:
+        result.update(status="missing-snapshot",
+                      detail=f"baseline {args.baseline}: {e}")
+        _emit(args.json, result)
+        return EXIT_MISSING_SNAPSHOT
+    try:
+        with open(args.candidate) as f:
+            cand = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError) as e:
+        result.update(status="missing-snapshot",
+                      detail=f"candidate {args.candidate}: {e}")
+        _emit(args.json, result)
+        return EXIT_MISSING_SNAPSHOT
     violations = compare_snapshots(base, cand, check_wall=not args.no_wall)
-    for v in violations:
-        print(f"FAIL {v}")
-    if not violations:
-        n = len(set(base.get("points", {})) & set(cand.get("points", {})))
-        print(f"ok: {n} scale point(s) within tolerance "
-              f"({args.baseline} vs {args.candidate})")
-    return 1 if violations else 0
+    result.update(
+        status="regression" if violations else "ok",
+        violations=violations,
+        points_compared=len(set(base.get("points", {}))
+                            & set(cand.get("points", {}))))
+    _emit(args.json, result)
+    return EXIT_REGRESSION if violations else EXIT_OK
 
 
 if __name__ == "__main__":

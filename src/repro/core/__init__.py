@@ -11,7 +11,7 @@
 """
 from repro.core.schema import ResourceSpec, RuntimeEnv, TaskSpec, SpecError
 from repro.core.compiler import ArtifactStore, ExecutionPlan, TaskCompiler
-from repro.core.cluster import Cluster, Node
+from repro.core.cluster import Cluster, Node, NodeHealth
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
                                   Start, make_policy, POLICIES)
 from repro.core.sim import ClusterSim, SimConfig, SimEvent

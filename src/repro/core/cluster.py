@@ -1,5 +1,5 @@
 """Cluster model: pods -> hosts -> chips, gang allocation, failures,
-stragglers.
+stragglers, node health + reliability.
 
 Models a multi-pod TPU fleet (default 2 pods x 64 hosts x 4 chips = 512
 chips). Gang allocation is all-or-nothing; placement prefers a single pod
@@ -20,20 +20,46 @@ whole pod, while picking the exact same nodes the sort-based scan would
 whose speed != 1.0 so the straggler sweep can skip entirely on the (common)
 healthy steady state.
 
+Reliability layer: every node carries an install age (``age_days``) and a
+lifetime failure count, combined into a *hazard key* — an integer-quantized
+expected failure rate per day that grows with age (wear-out, à la the Meta
+reliability study's age-dependent MTBF curves) and with observed failures.
+Per-pod hazard sums are maintained incrementally, giving O(1)
+``pod_reliability`` / ``survival_probability`` queries, and a second set of
+bucketed free lists ordered ``(-free, hazard, id)`` (built lazily on the
+first reliability-aware allocation, then maintained at the same mutation
+points) lets ``try_allocate(..., reliable=True)`` place gangs on the most
+reliable pods/nodes in the same O(chips + log hosts) — byte-identical to a
+brute-force scoring scan, and identical to the default placement whenever
+the fleet has no reliability signal (all ages 0, no failures).  Node health
+is a derived four-state machine (healthy / degraded / draining / repairing)
+with O(1) incremental per-state counts.
+
 Invariants (property-tested, plus ``check_counters`` in the sim tests):
   - sum of per-node allocations never exceeds node capacity,
   - unhealthy/draining nodes never receive allocations,
   - release() returns exactly what was allocated,
   - incremental counters always equal the brute-force node scan,
   - every live bucket entry sits in the bucket of its node's current free
-    count, and every allocatable node has exactly one live entry.
+    count, and every allocatable node has exactly one live entry,
+  - health-state counts and per-pod hazard sums equal the node scan.
 """
 from __future__ import annotations
 
 import heapq
-import itertools
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass
+from enum import Enum
 from typing import Dict, List, Optional, Set, Tuple
+
+
+class NodeHealth(str, Enum):
+    """Derived health state of a host (precedence: repairing > draining >
+    degraded > healthy)."""
+    HEALTHY = "healthy"
+    DEGRADED = "degraded"      # up, but running slow (speed != 1.0)
+    DRAINING = "draining"      # up, being vacated; no new allocations
+    REPAIRING = "repairing"    # down, waiting for repair completion
 
 
 @dataclass
@@ -45,19 +71,43 @@ class Node:
     healthy: bool = True
     draining: bool = False
     speed: float = 1.0            # <1.0 = straggler
+    age_days: float = 0.0         # install age at sim start
+    fail_count: int = 0           # lifetime failures observed
 
     @property
     def free(self) -> int:
         return 0 if (not self.healthy or self.draining) else self.chips - self.used
+
+    @property
+    def health(self) -> NodeHealth:
+        if not self.healthy:
+            return NodeHealth.REPAIRING
+        if self.draining:
+            return NodeHealth.DRAINING
+        if self.speed != 1.0:
+            return NodeHealth.DEGRADED
+        return NodeHealth.HEALTHY
 
 
 Allocation = List[Tuple[str, int]]    # [(node_id, n_chips), ...]
 
 
 class Cluster:
+    # reliability "belief" model: expected failures/day for a node, from its
+    # install age (wear-out term, Weibull-shaped) and observed failure count.
+    # A fresh node (age 0, no failures) has hazard 0, so reliability-aware
+    # placement degenerates to the default order on an unsignalled fleet.
+    AGE_HAZARD_PER_DAY = 1.0e-3   # hazard at age == AGE_REF_DAYS
+    AGE_REF_DAYS = 365.0
+    AGE_SHAPE = 1.5               # >1: wear-out (hazard grows with age)
+    FAIL_HAZARD_PER_DAY = 2.0e-3  # extra hazard per observed failure
+    REL_WINDOW_S = 7 * 86400.0    # horizon the reliability score integrates
+    _HKEY_SCALE = 1e9             # hazard/day -> integer key quantization
+
     def __init__(self, n_pods: int = 2, hosts_per_pod: int = 64,
                  chips_per_host: int = 4):
         self.n_pods = n_pods
+        self.hosts_per_pod = hosts_per_pod
         self.chips_per_host = chips_per_host
         self.nodes: Dict[str, Node] = {}
         for p in range(n_pods):
@@ -80,12 +130,24 @@ class Cluster:
             [[] for _ in range(chips_per_host + 1)] for _ in range(n_pods)]
         for nid, node in self.nodes.items():
             heapq.heappush(self._buckets[node.pod][chips_per_host], (nid, 0))
+        # health-state counts (O(1) per transition, parity-checked)
+        self._health_counts: Dict[NodeHealth, int] = {
+            h: 0 for h in NodeHealth}
+        self._health_counts[NodeHealth.HEALTHY] = n_pods * hosts_per_pod
+        # integer-quantized per-node hazard keys + per-pod sums (exact
+        # incremental arithmetic: no float drift vs the parity scan)
+        self._node_hkey: Dict[str, int] = {nid: 0 for nid in self.nodes}
+        self._pod_hkey: List[int] = [0] * n_pods
+        # reliability-ordered free lists: entries (hkey, node_id, gen) per
+        # (pod, free) bucket; None until the first reliable allocation
+        self._rbuckets: Optional[List[List[list]]] = None
 
     def _mutate(self, node: Node, fn) -> None:
         """Apply ``fn(node)`` keeping counters and bucket lists in sync."""
         free0 = node.free
         used0 = node.used
         cap0 = node.chips if node.healthy else 0
+        h0 = node.health
         fn(node)
         d_free = node.free - free0
         if d_free:
@@ -95,8 +157,16 @@ class Cluster:
             if node.free > 0:
                 heapq.heappush(self._buckets[node.pod][node.free],
                                (node.id, gen))
+                if self._rbuckets is not None:
+                    heapq.heappush(
+                        self._rbuckets[node.pod][node.free],
+                        (self._node_hkey[node.id], node.id, gen))
         self._used_total += node.used - used0
         self._healthy_chips += (node.chips if node.healthy else 0) - cap0
+        h1 = node.health
+        if h1 is not h0:
+            self._health_counts[h0] -= 1
+            self._health_counts[h1] += 1
 
     # -- capacity ------------------------------------------------------------
 
@@ -114,6 +184,82 @@ class Cluster:
         t = self.total_chips
         return self.used_chips() / t if t else 0.0
 
+    @property
+    def pod_capacity_chips(self) -> int:
+        return self.hosts_per_pod * self.chips_per_host
+
+    # -- reliability ---------------------------------------------------------
+
+    def _hazard_per_day(self, node: Node) -> float:
+        """Expected failures/day the scheduler believes this node has."""
+        h = self.FAIL_HAZARD_PER_DAY * node.fail_count
+        if node.age_days > 0:
+            h += self.AGE_HAZARD_PER_DAY * \
+                (node.age_days / self.AGE_REF_DAYS) ** self.AGE_SHAPE
+        return h
+
+    def node_hazard_key(self, node_id: str) -> int:
+        """Integer-quantized hazard (placement sort key; lower = better)."""
+        return self._node_hkey[node_id]
+
+    def pod_hazard_key(self, pod: int) -> int:
+        return self._pod_hkey[pod]
+
+    def _refresh_hazard(self, node: Node) -> None:
+        """Re-derive the node's hazard key after an age/fail-count change,
+        keeping the pod sum exact and re-bucketing the node so any
+        reliability-ordered entry carrying the stale key dies."""
+        new = round(self._hazard_per_day(node) * self._HKEY_SCALE)
+        old = self._node_hkey[node.id]
+        if new == old:
+            return
+        self._node_hkey[node.id] = new
+        self._pod_hkey[node.pod] += new - old
+        if node.free > 0:
+            gen = self._node_gen[node.id] = self._node_gen[node.id] + 1
+            heapq.heappush(self._buckets[node.pod][node.free],
+                           (node.id, gen))
+            if self._rbuckets is not None:
+                heapq.heappush(self._rbuckets[node.pod][node.free],
+                               (new, node.id, gen))
+
+    def set_node_age(self, node_id: str, age_days: float) -> None:
+        node = self.nodes[node_id]
+        node.age_days = age_days
+        self._refresh_hazard(node)
+
+    def node_reliability(self, node_id: str) -> float:
+        """P(node survives REL_WINDOW_S) under its believed hazard, in
+        (0, 1]; 1.0 for a fresh node."""
+        hz = self._node_hkey[node_id] / self._HKEY_SCALE
+        return math.exp(-hz * self.REL_WINDOW_S / 86400.0)
+
+    def pod_reliability(self, pod: int) -> float:
+        """Mean-host survival over REL_WINDOW_S for a pod (incremental)."""
+        avg = self._pod_hkey[pod] / self._HKEY_SCALE / self.hosts_per_pod
+        return math.exp(-avg * self.REL_WINDOW_S / 86400.0)
+
+    def survival_probability(self, duration_s: float, chips: int = 1) -> float:
+        """P(no participating host fails over ``duration_s``) for a gang of
+        ``chips`` placed on the most reliable pod (mean-host hazard)."""
+        if duration_s <= 0:
+            return 1.0
+        hosts = max(1, -(-chips // self.chips_per_host))
+        avg = min(self._pod_hkey) / self._HKEY_SCALE / self.hosts_per_pod
+        return math.exp(-avg * hosts * duration_s / 86400.0)
+
+    def _ensure_rbuckets(self) -> None:
+        if self._rbuckets is not None:
+            return
+        self._rbuckets = [
+            [[] for _ in range(self.chips_per_host + 1)]
+            for _ in range(self.n_pods)]
+        for nid, node in self.nodes.items():
+            if node.free > 0:
+                heapq.heappush(
+                    self._rbuckets[node.pod][node.free],
+                    (self._node_hkey[nid], nid, self._node_gen[nid]))
+
     def check_counters(self) -> None:
         """Assert the incremental counters match a brute-force node scan."""
         assert self._free_total == sum(n.free for n in self.nodes.values())
@@ -125,6 +271,20 @@ class Cluster:
         assert self._used_total == sum(n.used for n in self.nodes.values())
         assert self.abnormal_nodes == {
             nid for nid, n in self.nodes.items() if n.speed != 1.0}
+        # health-state counts: incremental per-state totals == node scan
+        scan_health = {h: 0 for h in NodeHealth}
+        for n in self.nodes.values():
+            scan_health[n.health] += 1
+        assert self._health_counts == scan_health, \
+            (self._health_counts, scan_health)
+        # hazard keys: per-node derivation and per-pod sums are exact
+        for nid, n in self.nodes.items():
+            assert self._node_hkey[nid] == round(
+                self._hazard_per_day(n) * self._HKEY_SCALE), nid
+        for p in range(self.n_pods):
+            assert self._pod_hkey[p] == sum(
+                self._node_hkey[nid] for nid, n in self.nodes.items()
+                if n.pod == p), p
         # bucket lists: live entries of every (pod, free-count) bucket equal
         # the brute-force scan (a live entry was pushed at its node's latest
         # free change, so gen match implies the bucket is the right one)
@@ -135,25 +295,44 @@ class Cluster:
                 scan = {nid for nid, n in self.nodes.items()
                         if n.pod == p and n.free == f}
                 assert live == scan, (p, f, live, scan)
+                if self._rbuckets is not None:
+                    rlive = {(hk, nid) for hk, nid, gen in self._rbuckets[p][f]
+                             if gen == self._node_gen[nid]}
+                    rscan = {(self._node_hkey[nid], nid) for nid in scan}
+                    assert rlive == rscan, (p, f, rlive, rscan)
 
     # -- allocation ----------------------------------------------------------
 
     def try_allocate(self, job_id: str, chips: int,
-                     prefer_single_pod: bool = True) -> Optional[Allocation]:
-        """Gang (all-or-nothing) allocation. Returns None if it doesn't fit."""
+                     prefer_single_pod: bool = True,
+                     reliable: bool = False) -> Optional[Allocation]:
+        """Gang (all-or-nothing) allocation. Returns None if it doesn't fit.
+
+        ``reliable=True`` selects the failure-aware placement order: pods by
+        ascending hazard (then fullest-first), nodes by ``(-free, hazard,
+        id)`` — identical to the default order when the fleet carries no
+        reliability signal.
+        """
         if job_id in self.allocations:
             raise ValueError(f"{job_id} already allocated")
         if chips > self.free_chips():
             return None
-        pods = sorted(range(self.n_pods), key=lambda p: -self.free_chips(p))
+        if reliable:
+            self._ensure_rbuckets()
+            pods = sorted(range(self.n_pods),
+                          key=lambda p: (self._pod_hkey[p],
+                                         -self.free_chips(p), p))
+        else:
+            pods = sorted(range(self.n_pods),
+                          key=lambda p: -self.free_chips(p))
         # single-pod placement if any pod fits
         if prefer_single_pod:
             for p in pods:
                 if self.free_chips(p) >= chips:
-                    alloc = self._take(chips, [p])
+                    alloc = self._take(chips, [p], reliable)
                     self._register(job_id, alloc)
                     return alloc
-        alloc = self._take(chips, pods)
+        alloc = self._take(chips, pods, reliable)
         if alloc is None:
             return None
         self._register(job_id, alloc)
@@ -164,12 +343,16 @@ class Cluster:
         for nid, _ in alloc:
             self._node_jobs[nid].add(job_id)
 
-    def _take(self, chips: int, pods: List[int]) -> Optional[Allocation]:
+    def _take(self, chips: int, pods: List[int],
+              reliable: bool = False) -> Optional[Allocation]:
         """Gang-pick ``chips`` from ``pods``: fullest nodes first, lowest id
         breaking ties — the same order a (-free, id) sort of every node would
-        yield, at O(chips + log hosts) via the bucketed free lists."""
+        yield, at O(chips + log hosts) via the bucketed free lists.  With
+        ``reliable`` the reliability-ordered buckets break free-count ties by
+        ascending hazard key before id ((-free, hkey, id) scan order)."""
+        buckets = self._rbuckets if reliable else self._buckets
         picked: Allocation = []
-        popped: List[Tuple[int, int, Tuple[str, int]]] = []
+        popped: List[Tuple[int, int, tuple]] = []
         need = chips
         for p in pods:
             if need == 0:
@@ -177,19 +360,20 @@ class Cluster:
             for f in range(self.chips_per_host, 0, -1):
                 if need == 0:
                     break
-                heap = self._buckets[p][f]
+                heap = buckets[p][f]
                 while need > 0 and heap:
                     entry = heapq.heappop(heap)
-                    if entry[1] != self._node_gen[entry[0]]:
+                    nid, gen = (entry[1], entry[2]) if reliable else entry
+                    if gen != self._node_gen[nid]:
                         continue          # stale: drop it for good
                     popped.append((p, f, entry))
                     take = min(f, need)
-                    picked.append((entry[0], take))
+                    picked.append((nid, take))
                     need -= take
         if need > 0:
             # gang doesn't fit: restore the live entries we popped
             for p, f, entry in popped:
-                heapq.heappush(self._buckets[p][f], entry)
+                heapq.heappush(buckets[p][f], entry)
             return None
         for nid, k in picked:
             # re-buckets the node (gen bump), so the popped entry is stale
@@ -229,9 +413,15 @@ class Cluster:
     # -- failures / stragglers ------------------------------------------------
 
     def fail_node(self, node_id: str) -> List[str]:
-        """Marks a node dead. Returns job ids that were running on it."""
+        """Marks a node dead (health -> repairing) and records the failure
+        in its reliability history. Returns job ids that were running on it."""
         node = self.nodes[node_id]
-        self._mutate(node, lambda n: setattr(n, "healthy", False))
+
+        def fn(n):
+            n.healthy = False
+            n.fail_count += 1
+        self._mutate(node, fn)
+        self._refresh_hazard(node)
         return self.jobs_on_node(node_id)
 
     def recover_node(self, node_id: str) -> None:
@@ -251,7 +441,10 @@ class Cluster:
         self.abnormal_nodes.discard(node_id)
 
     def set_speed(self, node_id: str, speed: float) -> None:
-        self.nodes[node_id].speed = speed
+        # speed never changes free/used, so _mutate only does the (cheap)
+        # health-count transition — one bookkeeping path for every mutation
+        self._mutate(self.nodes[node_id],
+                     lambda n: setattr(n, "speed", speed))
         if speed == 1.0:
             self.abnormal_nodes.discard(node_id)
         else:

@@ -18,11 +18,10 @@ which it is FAILED.
 from __future__ import annotations
 
 import io
-import json
 import os
 import time
 import traceback
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import numpy as np
 

@@ -69,6 +69,9 @@ class Job:
     end_time: Optional[float] = None
     preemptions: int = 0
     restarts: int = 0
+    # placement preference of the job's latest Start action; drivers reuse
+    # it when they re-allocate without a fresh policy decision (resizes)
+    place_reliable: bool = False
     events: List[Tuple[float, str]] = field(default_factory=list)
 
     # -- derived -------------------------------------------------------------
@@ -130,6 +133,9 @@ class Job:
 class Start:
     job_id: str
     chips: int
+    # ask the driver for failure-aware placement (reliability-ordered pods /
+    # nodes); emitted by reliability-aware policies for long, wide jobs
+    reliable: bool = False
 
 
 @dataclass
@@ -206,10 +212,18 @@ class OrderedJobView:
 class Policy:
     name = "base"
 
+    # failure-aware placement: a reliability-aware policy asks the driver to
+    # place *long, wide* gangs on high-reliability pods/nodes (they have the
+    # most restart work to lose); short/narrow jobs keep the default packing
+    RELIABLE_MIN_CHIPS = 16
+    RELIABLE_MIN_EST_S = 600.0
+
     def __init__(self, quotas: Optional[Dict[str, int]] = None,
-                 tenant_weights: Optional[Dict[str, float]] = None):
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 reliability_aware: bool = False):
         self.quotas = quotas or {}
         self.weights = tenant_weights or {}
+        self.reliability_aware = reliability_aware
         self.usage: Dict[str, float] = {}     # decayed chip-seconds / tenant
         # incremental-driver state: None until a driver binds (legacy callers
         # that invoke schedule()/account() directly keep the scanning paths)
@@ -319,6 +333,15 @@ class Policy:
         job/cluster state changes; None = event-driven invocation only."""
         return None
 
+    def _mk_start(self, job: Job, chips: int) -> Start:
+        """Start action; flags failure-aware placement for long, wide jobs
+        when this policy is reliability-aware."""
+        return Start(job.id, chips,
+                     reliable=self.reliability_aware
+                     and job.requested >= self.RELIABLE_MIN_CHIPS
+                     and job.spec.estimated_duration_s
+                     >= self.RELIABLE_MIN_EST_S)
+
     def _quota_ok(self, job: Job, running: Iterable[Job], chips: int,
                   started: Optional[Dict[str, int]] = None) -> bool:
         """Would granting ``chips`` keep ``job``'s tenant inside its quota?
@@ -357,7 +380,7 @@ class FIFO(Policy):
         for job in queue:
             if job.requested <= free and \
                     self._quota_ok(job, running, job.requested, started):
-                actions.append(Start(job.id, job.requested))
+                actions.append(self._mk_start(job, job.requested))
                 started[job.tenant] = \
                     started.get(job.tenant, 0) + job.requested
                 free -= job.requested
@@ -400,7 +423,7 @@ class EASYBackfill(Policy):
         for job in queue:                  # start the queue head while it fits
             if job.requested <= free and \
                     self._quota_ok(job, running, job.requested, started):
-                actions.append(Start(job.id, job.requested))
+                actions.append(self._mk_start(job, job.requested))
                 started[job.tenant] = \
                     started.get(job.tenant, 0) + job.requested
                 free -= job.requested
@@ -435,7 +458,7 @@ class EASYBackfill(Policy):
             spare = shadow_free - head.requested >= job.requested
             if fits and (ends_before or spare) and \
                     self._quota_ok(job, running, job.requested, started):
-                actions.append(Start(job.id, job.requested))
+                actions.append(self._mk_start(job, job.requested))
                 started[job.tenant] = \
                     started.get(job.tenant, 0) + job.requested
                 shadow_free -= job.requested
@@ -482,7 +505,7 @@ class FairShare(Policy):
                 break                      # nothing can start any more
             if job.requested <= free and \
                     self._quota_ok(job, running, job.requested, started):
-                actions.append(Start(job.id, job.requested))
+                actions.append(self._mk_start(job, job.requested))
                 started[job.tenant] = \
                     started.get(job.tenant, 0) + job.requested
                 free -= job.requested
@@ -510,7 +533,7 @@ class PriorityPreempt(Policy):
             if not self._quota_ok(job, running, job.requested, started):
                 continue
             if job.requested <= free:
-                actions.append(Start(job.id, job.requested))
+                actions.append(self._mk_start(job, job.requested))
                 started[job.tenant] = \
                     started.get(job.tenant, 0) + job.requested
                 free -= job.requested
@@ -543,7 +566,7 @@ class PriorityPreempt(Policy):
                 for v in chosen:
                     actions.append(Preempt(v.id))
                     preempted.add(v.id)
-                actions.append(Start(job.id, job.requested))
+                actions.append(self._mk_start(job, job.requested))
                 started[job.tenant] = \
                     started.get(job.tenant, 0) + job.requested
                 free = gain - job.requested
@@ -552,13 +575,40 @@ class PriorityPreempt(Policy):
 
 class GoodputElastic(Policy):
     """Pollux-style: distribute chips by greedy marginal goodput; elastic jobs
-    resize live (checkpoint-resize-resume in the execution layer)."""
+    resize live (checkpoint-resize-resume in the execution layer).
+
+    When ``reliability_aware``, marginal goodput is weighted by *pod locality
+    x survival probability over the job's predicted remaining runtime*: an
+    extra chip is worth less on a gang that is likely to lose it to a node
+    failure before finishing (wide + long on an aged fleet), and less again
+    once the grant spills across pods.  The weighting is deterministic and
+    rides the same incremental driver protocol — failures already flip the
+    change flag, so clean cadence wakeups still skip recomputation."""
     name = "goodput"
+
+    CROSS_POD_LOCALITY = 0.5      # discount once a grant no longer fits a pod
 
     def __init__(self, *args, rebalance_every: float = 30.0, **kw):
         super().__init__(*args, **kw)
         self.rebalance_every = rebalance_every
         self._last = -1e9
+
+    def _grant_score(self, job: Job, chips: int, cluster: Cluster) -> float:
+        """Pod locality x P(gang survives its predicted remaining runtime)."""
+        rate = job.steps_per_s(chips, chips > cluster.pod_capacity_chips)
+        remaining_s = max(0.0, job.total_steps - job.progress) \
+            / max(rate, 1e-12)
+        score = cluster.survival_probability(remaining_s, chips)
+        if chips > cluster.pod_capacity_chips:
+            score *= self.CROSS_POD_LOCALITY
+        return score
+
+    def _marginal(self, job: Job, chips: int, cluster: Cluster) -> float:
+        """Goodput gain of chip ``chips+1``, reliability-weighted when on."""
+        d = job.steps_per_s(chips + 1) - job.steps_per_s(chips)
+        if self.reliability_aware:
+            d *= self._grant_score(job, chips + 1, cluster)
+        return d
 
     def wakeup_interval(self):
         return self.rebalance_every
@@ -593,7 +643,7 @@ class GoodputElastic(Policy):
                     grant = min(grant, q - used)
                 if grant < need or used + grant > q:
                     continue
-            actions.append(Start(j.id, grant))
+            actions.append(self._mk_start(j, grant))
             granted[j.tenant] = granted.get(j.tenant, 0) + grant
             free -= grant
         return actions
@@ -626,7 +676,7 @@ class GoodputElastic(Policy):
         heap = []
         for j in jobs:
             if j.elastic and grant[j.id] and grant[j.id] < j.requested:
-                d = j.steps_per_s(grant[j.id] + 1) - j.steps_per_s(grant[j.id])
+                d = self._marginal(j, grant[j.id], cluster)
                 heapq.heappush(heap, (-d, j.submit_time, j.id))
         by_id = {j.id: j for j in jobs}
         while budget > 0 and heap:
@@ -635,7 +685,7 @@ class GoodputElastic(Policy):
             grant[jid] += 1
             budget -= 1
             if grant[jid] < j.requested:
-                d = j.steps_per_s(grant[jid] + 1) - j.steps_per_s(grant[jid])
+                d = self._marginal(j, grant[jid], cluster)
                 heapq.heappush(heap, (-d, j.submit_time, jid))
         actions: List[Action] = []
         for j in running:
@@ -646,7 +696,7 @@ class GoodputElastic(Policy):
                 actions.append(Resize(j.id, g))
         for j in pending:
             if grant.get(j.id, 0) > 0:
-                actions.append(Start(j.id, grant[j.id]))
+                actions.append(self._mk_start(j, grant[j.id]))
         return actions
 
 

@@ -13,7 +13,7 @@ import dataclasses
 import hashlib
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Optional
 
 QOS_CLASSES = ("realtime", "batch", "besteffort")
 BACKENDS = ("jax_train", "jax_serve", "shell")

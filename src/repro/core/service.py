@@ -19,7 +19,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.cluster import Cluster
-from repro.core.compiler import ArtifactStore, ExecutionPlan, TaskCompiler
+from repro.core.compiler import ArtifactStore, TaskCompiler
 from repro.core.executor import LocalExecutor
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
                                   Start, make_policy)
@@ -89,8 +89,10 @@ class TACC:
         for a in actions:
             job = self.jobs[a.job_id]
             if isinstance(a, Start) and job.state == JobState.PENDING:
+                job.place_reliable = a.reliable
                 alloc = self.cluster.try_allocate(
-                    job.id, a.chips, job.spec.resources.prefer_single_pod)
+                    job.id, a.chips, job.spec.resources.prefer_single_pod,
+                    a.reliable)
                 if alloc is not None:
                     job.state = JobState.RUNNING
                     job.chips = a.chips
@@ -109,7 +111,8 @@ class TACC:
                 self.cluster.release(job.id)
                 if self.cluster.try_allocate(
                         job.id, a.chips,
-                        job.spec.resources.prefer_single_pod) is not None:
+                        job.spec.resources.prefer_single_pod,
+                        job.place_reliable) is not None:
                     job.chips = a.chips
                 else:
                     job.state = JobState.PENDING

@@ -3,8 +3,15 @@
 Drives a :class:`Policy` against the :class:`Cluster` model with the
 operational behaviors of the Execution Layer: checkpoint-then-preempt,
 node-failure restart from the last checkpoint, straggler detection +
-drain/reallocate, elastic resizes. Used by the scheduler benchmarks (the
-paper's shared-cluster-efficiency claims) and by the property tests.
+drain/reallocate, elastic resizes, and the incident/repair lifecycle
+(an ``incident`` event fails a node and the sim schedules its
+repair-completion — exact in the heap engine, next tick in the legacy
+engine; ``Start.reliable`` routes placement through the cluster's
+failure-aware order). Used by the scheduler benchmarks (the paper's
+shared-cluster-efficiency claims) and by the property tests.  Metrics
+include the reliability columns (failures, observed MTTF, repair-hours,
+restarts avoided, per-tenant admission rate) — see
+``bench_scheduler.py --help`` for the column glossary.
 
 The sim binds the policy's full incremental driver protocol
 (``bind_incremental`` + ``bind_queues``) and feeds the queue hooks at every
@@ -45,12 +52,10 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster
-from repro.core.compiler import ExecutionPlan
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
                                   Start)
 
@@ -71,9 +76,10 @@ class SimConfig:
 @dataclass
 class SimEvent:
     time: float
-    kind: str                      # fail_node | recover_node | set_speed
+    kind: str                # fail_node | recover_node | set_speed | incident
     node: str
-    value: float = 0.0
+    value: float = 0.0       # set_speed: factor; incident: repair seconds
+    info: str = ""           # incident: "transient" | "hard"
 
 
 @dataclass
@@ -113,6 +119,11 @@ class ClusterSim:
         self._n_external = 0                  # arrivals+injects still queued
         self._event_mode = False
         self._workload_dirty = False          # unsorted submits/injects
+        # reliability accounting (fed by fail_node/incident/repair events)
+        self._n_failures = 0                  # node-failure events observed
+        self._failures_idle = 0               # ... that hit zero running jobs
+        self._repair_s = 0.0                  # summed incident repair time
+        self._repair_until: Dict[str, float] = {}    # node -> repair end
 
     # -- workload ------------------------------------------------------------
     # submit/inject only append: sorting a 50k-job month trace once per
@@ -154,9 +165,10 @@ class ClusterSim:
         job.log(self.now, msg)
         self.trace.append((self.now, job.id, msg))
 
-    def _start(self, job: Job, chips: int) -> None:
+    def _start(self, job: Job, chips: int, reliable: bool = False) -> None:
+        job.place_reliable = reliable
         alloc = self.cluster.try_allocate(
-            job.id, chips, job.spec.resources.prefer_single_pod)
+            job.id, chips, job.spec.resources.prefer_single_pod, reliable)
         if alloc is None:
             # grant couldn't be applied: flag the divergence so a cadence
             # policy retries instead of skipping the next rebalance
@@ -210,7 +222,7 @@ class ClusterSim:
             if isinstance(a, Start):
                 job = self.jobs[a.job_id]
                 if job.state == JobState.PENDING:
-                    self._start(job, a.chips)
+                    self._start(job, a.chips, a.reliable)
             elif isinstance(a, Preempt):
                 job = self.jobs[a.job_id]
                 if job.state == JobState.RUNNING:
@@ -225,13 +237,15 @@ class ClusterSim:
                         self._settle(job)
                     job.ckpt_progress = job.progress
                     self.cluster.release(job.id)
+                    rel = job.place_reliable
                     alloc = self.cluster.try_allocate(
-                        job.id, a.chips, job.spec.resources.prefer_single_pod)
+                        job.id, a.chips, job.spec.resources.prefer_single_pod,
+                        rel)
                     if alloc is None:   # rollback
                         self.policy.note_change()   # grant not applied
                         alloc = self.cluster.try_allocate(
                             job.id, job.chips,
-                            job.spec.resources.prefer_single_pod)
+                            job.spec.resources.prefer_single_pod, rel)
                         if alloc is None:
                             self.policy.grant_delta(job.tenant, -job.chips)
                             self._running_jobs.pop(job.id, None)
@@ -287,14 +301,39 @@ class ClusterSim:
 
     def _apply_injected(self, ev: SimEvent) -> None:
         self.policy.note_change()
-        if ev.kind == "fail_node":
+        if ev.kind in ("fail_node", "incident"):
+            if not self.cluster.nodes[ev.node].healthy:
+                return          # already down: a dead node cannot fail again
             victims = self.cluster.fail_node(ev.node)
+            self._n_failures += 1
+            if not victims:
+                # the failure landed on a node no job was placed on: with
+                # failure-aware placement these are the restarts avoided
+                self._failures_idle += 1
             for jid in victims:
                 job = self.jobs[jid]
                 job.restarts += 1
                 self._stop(job, JobState.PENDING, checkpoint=False,
                            reason=f"node-failure({ev.node})")
+            if ev.kind == "incident":
+                # age-model incident: the trace carries the sampled repair
+                # time; the sim owns the repair-completion event (exact in
+                # the heap engine, next tick in the legacy engine) and the
+                # node stays down until it fires — an unrelated memoryless
+                # recover event must not resurrect it mid-repair
+                repair_s = max(0.0, float(ev.value))
+                self._repair_s += repair_s
+                self._repair_until[ev.node] = self.now + repair_s
+                if self._event_mode:
+                    self._push(self.now + repair_s, "repair_done", ev.node)
+                else:
+                    self.pending_events.append(SimEvent(
+                        self.now + repair_s, "recover_node", ev.node))
+                    self._workload_dirty = True
         elif ev.kind == "recover_node":
+            if self.now < self._repair_until.get(ev.node, 0.0):
+                return          # an incident repair still owns this node
+            self._repair_until.pop(ev.node, None)
             self.cluster.recover_node(ev.node)
         elif ev.kind == "set_speed":
             # snapshot each affected running job's effective speed first: a
@@ -446,6 +485,11 @@ class ClusterSim:
             job.end_time = self.now
             self._stop(job, JobState.COMPLETED, checkpoint=True)
             return True
+        if kind == "repair_done":
+            self._repair_until.pop(payload, None)
+            self.cluster.recover_node(payload)
+            self.policy.note_change()
+            return True
         raise ValueError(kind)
 
     def _schedule_now(self) -> None:
@@ -527,7 +571,27 @@ class ClusterSim:
         makespan = max((j.end_time for j in done if j.end_time), default=0.0)
         total_chip_s = sum(j.total_steps * j.spec.entry.get("work_per_step", 1.0)
                            for j in done)
+        # reliability: fleet MTTF observed over the run, repair debt, and the
+        # failures that hit empty nodes (with failure-aware placement, the
+        # restarts avoided); per-tenant admission = share of a tenant's
+        # submissions that got chips at least once
+        submitted: Dict[str, int] = {}
+        admitted: Dict[str, int] = {}
+        for j in self.jobs.values():
+            submitted[j.tenant] = submitted.get(j.tenant, 0) + 1
+            if j.first_start is not None:
+                admitted[j.tenant] = admitted.get(j.tenant, 0) + 1
+        rel = {
+            "failures": float(self._n_failures),
+            "mttf_hours": (len(self.cluster.nodes) * self.now / 3600.0
+                           / self._n_failures) if self._n_failures else 0.0,
+            "repair_hours": self._repair_s / 3600.0,
+            "restarts_avoided": float(self._failures_idle),
+        }
+        for t in sorted(submitted):
+            rel[f"admission_rate_{t}"] = admitted.get(t, 0) / submitted[t]
         return {
+            **rel,
             "completed": len(done),
             "jobs": len(self.jobs),
             "makespan": makespan,

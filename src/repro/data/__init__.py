@@ -1,3 +1,4 @@
 from repro.data.synthetic import SyntheticLM, input_specs
-from repro.data.trace import (SCALE_PRESETS, Trace, TraceConfig, TraceJob,
-                              horizon, scale_preset, synthesize)
+from repro.data.trace import (SCALE_PRESETS, Incident, ReliabilityConfig,
+                              Trace, TraceConfig, TraceJob, hazard_per_day,
+                              horizon, mtbf_days, scale_preset, synthesize)

@@ -13,16 +13,26 @@ across engines, seeds and future PRs.
 
 Trace JSON format (``Trace.to_dict``)::
 
-    {"format": 1,
+    {"format": 2,
      "meta":   {...TraceConfig echo or free-form...},
      "jobs":   [{id, submit_time, chips, total_steps, tenant, min_chips,
                  priority, preemptible, work_per_step, comm_frac,
                  estimated_duration_s}, ...],
-     "events": [{time, kind, node, value}, ...]}
+     "events": [{time, kind, node, value, info}, ...],
+     "incidents": [{node, start, kind, repair_s, age_days}, ...],
+     "node_ages": {node_id: age_days, ...}}
+
+Format 2 (this PR) adds the reliability layer: per-node install ages, an
+age-dependent Weibull failure process (hazard grows with node age — the
+campus fleets' wear-out curve, à la the Meta reliability study), lognormal
+repair times split into *transient* restarts and *hard* repairs, and
+first-class :class:`Incident` records next to the flat event list.  Format 1
+traces (no incidents/ages) still load unchanged.
 
 ``Trace.install(sim, compiler)`` compiles each row into a TaskSpec ->
-ExecutionPlan -> Job and submits it together with the injected events, so
-the same trace drives either simulator engine (event or legacy tick).
+ExecutionPlan -> Job and submits it together with the injected events, and
+installs the per-node install ages into the sim's cluster so failure-aware
+placement sees the age signal from t=0.
 
 Virtual-time only; nothing here touches JAX.
 """
@@ -40,7 +50,8 @@ from repro.core.schema import ResourceSpec, RuntimeEnv, TaskSpec
 from repro.core.scheduler import Job
 from repro.core.sim import SimEvent
 
-TRACE_FORMAT = 1
+TRACE_FORMAT = 2            # current write format
+_READ_FORMATS = (1, 2)      # still-loadable formats
 
 
 @dataclass
@@ -70,6 +81,53 @@ class TraceJob:
             total_steps=self.total_steps,
             estimated_duration_s=self.estimated_duration_s
             or float(self.total_steps))
+
+
+@dataclass
+class ReliabilityConfig:
+    """Age-dependent node-failure model (Weibull hazard + lognormal repair).
+
+    Each node draws an install age uniformly from ``age_days``; failures are
+    then sampled from the Weibull hazard at the node's (advancing) age via
+    thinning, so old nodes fail more often than young ones whenever
+    ``weibull_shape > 1`` (wear-out).  Every failure becomes an
+    :class:`Incident`: *transient* (process wedge / restart, short lognormal
+    repair) with probability ``transient_frac``, else *hard* (part swap, long
+    lognormal repair); the node is down until its repair completes and
+    cannot fail again meanwhile.
+    """
+    age_days: Tuple[float, float] = (30.0, 1460.0)   # install-age range
+    weibull_shape: float = 1.5        # >1: hazard increases with age
+    weibull_scale_days: float = 600.0  # characteristic life
+    transient_frac: float = 0.7
+    repair_transient_s: Tuple[float, float] = (300.0, 0.6)   # median, sigma
+    repair_hard_s: Tuple[float, float] = (10800.0, 0.9)      # median, sigma
+
+
+def hazard_per_day(age_days: float, shape: float,
+                   scale_days: float) -> float:
+    """Weibull hazard h(t) = (k/l) * (t/l)^(k-1) in failures/day.
+
+    Monotonically increasing in age for shape > 1 (wear-out), decreasing for
+    shape < 1 (infant mortality), constant at 1/scale for shape == 1.
+    """
+    t = max(age_days, 1e-9) / scale_days
+    return (shape / scale_days) * t ** (shape - 1.0)
+
+
+def mtbf_days(age_days: float, shape: float, scale_days: float) -> float:
+    """Instantaneous MTBF at the given node age (1 / hazard)."""
+    return 1.0 / hazard_per_day(age_days, shape, scale_days)
+
+
+@dataclass
+class Incident:
+    """One node-failure incident of a trace (pure data)."""
+    node: str
+    start: float              # sim time of the failure
+    kind: str                 # "transient" | "hard"
+    repair_s: float           # sampled repair duration
+    age_days: float           # node age when it failed
 
 
 @dataclass
@@ -106,6 +164,10 @@ class TraceConfig:
     slow_duration_s: Tuple[float, float] = (200.0, 800.0)
     ops_start: float = 200.0
     ops_window: float = 3800.0
+    # age-dependent failure model; None keeps the memoryless n_failures
+    # process only (both can coexist: uniform failures model e.g. operator
+    # error, the reliability model age-driven hardware wear)
+    reliability: Optional[ReliabilityConfig] = None
 
 
 @dataclass
@@ -113,6 +175,8 @@ class Trace:
     jobs: List[TraceJob]
     events: List[SimEvent] = field(default_factory=list)
     meta: Dict = field(default_factory=dict)
+    incidents: List[Incident] = field(default_factory=list)
+    node_ages: Dict[str, float] = field(default_factory=dict)
 
     # -- replay --------------------------------------------------------------
 
@@ -121,11 +185,15 @@ class Trace:
                     submit_time=tj.submit_time) for tj in self.jobs]
 
     def install(self, sim, compiler) -> None:
-        """Submit every job and inject every event into a ClusterSim."""
+        """Submit every job, inject every event, and install node install
+        ages into a ClusterSim's cluster."""
+        for nid, age in self.node_ages.items():
+            if nid in sim.cluster.nodes:
+                sim.cluster.set_node_age(nid, age)
         for job in self.materialize(compiler):
             sim.submit(job)
         for ev in self.events:
-            sim.inject(SimEvent(ev.time, ev.kind, ev.node, ev.value))
+            sim.inject(SimEvent(ev.time, ev.kind, ev.node, ev.value, ev.info))
 
     # -- (de)serialization ---------------------------------------------------
 
@@ -135,15 +203,19 @@ class Trace:
         return {"format": TRACE_FORMAT,
                 "meta": json.loads(json.dumps(self.meta)),
                 "jobs": [dataclasses.asdict(j) for j in self.jobs],
-                "events": [dataclasses.asdict(e) for e in self.events]}
+                "events": [dataclasses.asdict(e) for e in self.events],
+                "incidents": [dataclasses.asdict(i) for i in self.incidents],
+                "node_ages": dict(self.node_ages)}
 
     @classmethod
     def from_dict(cls, d: Dict) -> "Trace":
-        if d.get("format") != TRACE_FORMAT:
+        if d.get("format") not in _READ_FORMATS:
             raise ValueError(f"unsupported trace format {d.get('format')!r}")
         return cls(jobs=[TraceJob(**j) for j in d["jobs"]],
                    events=[SimEvent(**e) for e in d["events"]],
-                   meta=d.get("meta", {}))
+                   meta=d.get("meta", {}),
+                   incidents=[Incident(**i) for i in d.get("incidents", [])],
+                   node_ages=d.get("node_ages", {}))
 
     def save(self, path: str) -> None:
         """Write the trace as JSON; a ``.gz`` suffix selects a byte-stable
@@ -198,6 +270,20 @@ SCALE_PRESETS: Dict[str, TraceConfig] = {
         n_jobs=50000, mean_gap_s=52.0, diurnal_amplitude=0.7,
         width_alpha=1.2, n_failures=480, rack_failure_frac=0.3,
         n_stragglers=400, ops_start=3600.0, ops_window=2550000.0),
+    # the month workload under the age-dependent reliability model: no
+    # memoryless failures — every outage is an Incident sampled from the
+    # per-node Weibull hazard (mixed-age fleet, wear-out shape), with
+    # transient restarts vs multi-hour hard repairs.  Benchmarked with
+    # reliability-aware policies (failure-aware placement + survival-weighted
+    # goodput); the seed-0 synthesis is a committed artifact like month-50k.
+    "month-50k-rel": TraceConfig(
+        n_jobs=50000, mean_gap_s=52.0, diurnal_amplitude=0.7,
+        width_alpha=1.2, n_failures=0, rack_failure_frac=0.0,
+        n_stragglers=400, ops_start=3600.0, ops_window=2550000.0,
+        reliability=ReliabilityConfig(
+            age_days=(30.0, 1460.0), weibull_shape=1.7,
+            weibull_scale_days=200.0, transient_frac=0.7,
+            repair_transient_s=(600.0, 0.6), repair_hard_s=(10800.0, 0.9))),
 }
 
 
@@ -268,9 +354,47 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
             * rng.uniform(*cfg.est_noise)))
 
     events: List[SimEvent] = []
+    incidents: List[Incident] = []
+    node_ages: Dict[str, float] = {}
     nodes = list(nodes)
-    if (cfg.n_failures or cfg.n_stragglers) and not nodes:
+    if (cfg.n_failures or cfg.n_stragglers or cfg.reliability) and not nodes:
         raise ValueError("node ids are required to synthesize ops events")
+    if cfg.reliability is not None:
+        rel = cfg.reliability
+        for nid in nodes:
+            node_ages[nid] = rng.uniform(*rel.age_days)
+        end = cfg.ops_start + cfg.ops_window
+        for nid in nodes:
+            age0 = node_ages[nid]
+            # thinning against the per-second hazard; the bound covers the
+            # whole window for wear-out shapes (hazard only grows) and the
+            # window start for infant-mortality shapes (hazard only falls)
+            lam_max = max(
+                hazard_per_day(age0 + cfg.ops_start / 86400.0,
+                               rel.weibull_shape, rel.weibull_scale_days),
+                hazard_per_day(age0 + end / 86400.0,
+                               rel.weibull_shape, rel.weibull_scale_days),
+            ) / 86400.0
+            if lam_max <= 0:
+                continue
+            t = cfg.ops_start
+            while True:
+                t += rng.expovariate(lam_max)
+                if t >= end:
+                    break
+                lam_t = hazard_per_day(age0 + t / 86400.0, rel.weibull_shape,
+                                       rel.weibull_scale_days) / 86400.0
+                if rng.random() * lam_max > lam_t:
+                    continue
+                hard = rng.random() >= rel.transient_frac
+                med, sigma = rel.repair_hard_s if hard \
+                    else rel.repair_transient_s
+                repair_s = rng.lognormvariate(math.log(med), sigma)
+                kind = "hard" if hard else "transient"
+                incidents.append(Incident(nid, t, kind, repair_s,
+                                          age0 + t / 86400.0))
+                events.append(SimEvent(t, "incident", nid, repair_s, kind))
+                t += repair_s          # down while repairing: no re-failure
     for _ in range(cfg.n_failures):
         t = rng.uniform(cfg.ops_start, cfg.ops_start + cfg.ops_window)
         back = t + rng.uniform(*cfg.recover_s)
@@ -290,5 +414,7 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
         events.append(SimEvent(t + rng.uniform(*cfg.slow_duration_s),
                                "set_speed", n, 1.0))
     events.sort(key=lambda e: e.time)
+    incidents.sort(key=lambda i: i.start)
     return Trace(jobs=jobs, events=events,
-                 meta={"config": dataclasses.asdict(cfg)})
+                 meta={"config": dataclasses.asdict(cfg)},
+                 incidents=incidents, node_ages=node_ages)

@@ -85,6 +85,68 @@ def test_cli_roundtrip(tmp_path):
                              "--candidate", str(cand_p)]) == 1
 
 
+def test_json_output_and_exit_codes(tmp_path, capsys):
+    """--json emits a machine-readable object; exit codes: 0 ok /
+    1 regression / 2 snapshot missing (the CI annotation contract)."""
+    base_p, cand_p = tmp_path / "base.json", tmp_path / "cand.json"
+    base_p.write_text(json.dumps(BASE))
+    cand = copy.deepcopy(BASE)
+    cand["points"]["default"]["results"]["fifo"]["avg_jct"] = 50.0
+    cand_p.write_text(json.dumps(cand))
+
+    assert check_bench.main(["--baseline", str(base_p), "--candidate",
+                             str(base_p), "--json"]) == check_bench.EXIT_OK
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "ok"
+    assert out["violations"] == []
+    assert out["points_compared"] == 1
+
+    assert check_bench.main(
+        ["--baseline", str(base_p), "--candidate", str(cand_p),
+         "--json"]) == check_bench.EXIT_REGRESSION
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "regression"
+    assert len(out["violations"]) == 1 and "avg_jct" in out["violations"][0]
+
+
+def test_missing_snapshot_exit_code(tmp_path, capsys):
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps(BASE))
+    # candidate not benched yet
+    rc = check_bench.main(["--baseline", str(base_p),
+                           "--candidate", str(tmp_path / "nope.json"),
+                           "--json"])
+    assert rc == check_bench.EXIT_MISSING_SNAPSHOT
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "missing-snapshot" and "nope" in out["detail"]
+    # baseline missing (e.g. first PR of a repo without a snapshot)
+    rc = check_bench.main(["--baseline", str(tmp_path / "gone.json"),
+                           "--candidate", str(base_p)])
+    assert rc == check_bench.EXIT_MISSING_SNAPSHOT
+    assert "MISSING" in capsys.readouterr().out
+
+
+def test_artifact_config_match_fills_defaults_for_new_keys():
+    """A committed trace artifact written before a TraceConfig field existed
+    (e.g. the reliability model) must keep matching its preset as long as
+    the new field is at its default — and stop matching otherwise."""
+    import dataclasses
+
+    import bench_scheduler
+    from repro.data.trace import ReliabilityConfig, TraceConfig
+
+    cfg = TraceConfig(n_jobs=7)
+    old_style = json.loads(json.dumps(dataclasses.asdict(cfg)))
+    del old_style["reliability"]               # field didn't exist back then
+    assert bench_scheduler.config_matches(old_style, cfg)
+    assert not bench_scheduler.config_matches(None, cfg)
+    assert not bench_scheduler.config_matches(
+        old_style, dataclasses.replace(cfg, n_jobs=8))
+    # a preset that now *uses* the new field no longer matches the old bytes
+    rel = dataclasses.replace(cfg, reliability=ReliabilityConfig())
+    assert not bench_scheduler.config_matches(old_style, rel)
+
+
 def test_git_baseline_loads_committed_snapshot():
     """`--baseline git:HEAD` must parse the committed snapshot (skips when
     git/HEAD is unavailable, e.g. a tarball checkout)."""

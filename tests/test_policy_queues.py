@@ -16,7 +16,8 @@ from repro.core import (Cluster, ClusterSim, Job, JobState, ResourceSpec,
                         RuntimeEnv, SimConfig, Start, TaskSpec, make_policy)
 from repro.core.compiler import ArtifactStore, TaskCompiler
 from repro.core.scheduler import OrderedJobView
-from repro.data.trace import TraceConfig, horizon, synthesize
+from repro.data.trace import (ReliabilityConfig, TraceConfig, horizon,
+                              synthesize)
 
 ALL_POLICIES = ["fifo", "backfill", "fair", "priority", "goodput"]
 
@@ -52,17 +53,34 @@ def parity_trace_cfg(seed):
                        recover_s=(60.0, 120.0), slow_duration_s=(60.0, 150.0))
 
 
-def run_traced(tmp_path, policy, seed, *, indexed, engine="event"):
-    comp = mkcompiler(tmp_path / f"{policy}-{seed}-{indexed}-{engine}")
+def reliability_trace_cfg(seed):
+    """parity_trace_cfg plus the age-dependent incident model: repairs,
+    install ages and hazard churn exercise the reliability-ordered buckets
+    and the survival-weighted goodput scoring."""
+    return dataclasses.replace(
+        parity_trace_cfg(seed),
+        ops_window=1500.0,
+        reliability=ReliabilityConfig(
+            age_days=(100.0, 2000.0), weibull_shape=1.5,
+            weibull_scale_days=2.0, transient_frac=0.6,
+            repair_transient_s=(60.0, 0.5), repair_hard_s=(300.0, 0.5)))
+
+
+def run_traced(tmp_path, policy, seed, *, indexed, engine="event",
+               rel_aware=False):
+    comp = mkcompiler(
+        tmp_path / f"{policy}-{seed}-{indexed}-{engine}-{rel_aware}")
     c = small_cluster()
     pol = make_policy(policy, quotas={"lab-c": 16},
-                      tenant_weights={"lab-a": 2, "lab-b": 1, "lab-c": 1})
+                      tenant_weights={"lab-a": 2, "lab-b": 1, "lab-c": 1},
+                      reliability_aware=rel_aware)
     if not indexed:
         pol.bind_queues = lambda: None        # force the sort-based reference
     sim = ClusterSim(c, pol, SimConfig(
         tick=2.0, checkpoint_interval_s=30, checkpoint_cost_s=2,
         restart_cost_s=10, engine=engine))
-    tr = synthesize(parity_trace_cfg(seed), list(c.nodes))
+    cfg = reliability_trace_cfg(seed) if rel_aware else parity_trace_cfg(seed)
+    tr = synthesize(cfg, list(c.nodes))
     tr.install(sim, comp)
     metrics = sim.run(until=horizon(tr))
     return metrics, sim.trace
@@ -78,6 +96,22 @@ def test_indexed_queues_match_sorting_reference(tmp_path, policy, seed):
     reference on a randomized failure-heavy trace."""
     m_idx, t_idx = run_traced(tmp_path, policy, seed, indexed=True)
     m_ref, t_ref = run_traced(tmp_path, policy, seed, indexed=False)
+    assert t_idx == t_ref
+    assert m_idx == m_ref
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_indexed_queues_match_reference_with_reliability(tmp_path, policy,
+                                                         seed):
+    """Failure-aware placement + survival-weighted goodput are pure scoring
+    layers on top of the indexed queues: with reliability_aware policies on
+    an age-model trace (install ages, incidents, repairs) the hook-fed path
+    must still emit the exact action stream of the full-sort reference."""
+    m_idx, t_idx = run_traced(tmp_path, policy, seed, indexed=True,
+                              rel_aware=True)
+    m_ref, t_ref = run_traced(tmp_path, policy, seed, indexed=False,
+                              rel_aware=True)
     assert t_idx == t_ref
     assert m_idx == m_ref
 
@@ -142,6 +176,79 @@ def _reference_take(cluster, chips, pods):
             if need == 0:
                 return picked
     return picked if need == 0 else None
+
+
+def reference_allocate_reliable(cluster, chips, prefer_single_pod=True):
+    """Brute-force failure-aware placement: pods scanned by (hazard sum,
+    -free, id); nodes inside a pod by (-free, hazard key, id)."""
+    if chips > cluster.free_chips():
+        return None
+    pods = sorted(range(cluster.n_pods),
+                  key=lambda p: (cluster.pod_hazard_key(p),
+                                 -cluster.free_chips(p), p))
+    if prefer_single_pod:
+        for p in pods:
+            if cluster.free_chips(p) >= chips:
+                return _reference_take_reliable(cluster, chips, [p])
+    return _reference_take_reliable(cluster, chips, pods)
+
+
+def _reference_take_reliable(cluster, chips, pods):
+    picked, need = [], chips
+    for p in pods:
+        nodes = sorted((n for n in cluster.nodes.values()
+                        if n.pod == p and n.free > 0),
+                       key=lambda n: (-n.free, cluster.node_hazard_key(n.id),
+                                      n.id))
+        for n in nodes:
+            take = min(n.free, need)
+            picked.append((n.id, take))
+            need -= take
+            if need == 0:
+                return picked
+    return picked if need == 0 else None
+
+
+def test_reliable_take_matches_scoring_scan_reference():
+    """Randomized churn — allocate (both placement modes) / release / fail /
+    recover / drain / age changes: the reliability-ordered bucket pick must
+    equal the brute-force scoring scan at every allocation, and every
+    incremental counter (health, hazard, buckets) must stay consistent."""
+    rng = random.Random(20260726)
+    cluster = Cluster(n_pods=2, hosts_per_pod=8, chips_per_host=4)
+    nodes = list(cluster.nodes)
+    live, seq = [], 0
+    for step in range(600):
+        op = rng.random()
+        if op < 0.45:
+            chips = rng.choice((1, 2, 3, 4, 8, 16, 24, 32, 48))
+            prefer = rng.random() < 0.8
+            reliable = rng.random() < 0.6
+            ref = reference_allocate_reliable if reliable \
+                else reference_allocate
+            expect = ref(cluster, chips, prefer)
+            jid = f"j{seq}"
+            seq += 1
+            got = cluster.try_allocate(jid, chips, prefer, reliable)
+            assert got == expect, (step, chips, prefer, reliable)
+            if got is not None:
+                live.append(jid)
+        elif op < 0.65 and live:
+            cluster.release(live.pop(rng.randrange(len(live))))
+        elif op < 0.75:
+            for jid in cluster.fail_node(rng.choice(nodes)):
+                cluster.release(jid)
+                live.remove(jid)
+        elif op < 0.85:
+            cluster.recover_node(rng.choice(nodes))
+        elif op < 0.93:
+            cluster.drain(rng.choice(nodes), rng.random() < 0.5)
+        else:
+            cluster.set_node_age(rng.choice(nodes),
+                                 rng.uniform(0.0, 2500.0))
+        if step % 25 == 0:
+            cluster.check_counters()
+    cluster.check_counters()
 
 
 def test_bucketed_take_matches_node_sort_reference():

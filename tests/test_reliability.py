@@ -1,0 +1,358 @@
+"""Reliability subsystem: age-dependent hazard model, incident/repair
+lifecycle through both sim engines, node health-state machine + counter
+parity, failure-aware placement, and survival-weighted goodput."""
+import dataclasses
+
+import pytest
+
+from repro.core import (Cluster, ClusterSim, ResourceSpec, RuntimeEnv,
+                        SimConfig, SimEvent, TaskSpec, make_policy)
+from repro.core.cluster import NodeHealth
+from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.core.scheduler import Job, Start
+from repro.data.trace import (ReliabilityConfig, Trace, TraceConfig,
+                              hazard_per_day, horizon, mtbf_days,
+                              scale_preset, synthesize)
+
+
+def mkcompiler(root):
+    return TaskCompiler(ArtifactStore(str(root / "cas")), str(root / "work"))
+
+
+def mkjob(compiler, name, chips, steps=100, *, tenant="t", priority=0,
+          min_chips=0, submit=0.0, preemptible=True, est_s=None):
+    spec = TaskSpec(
+        name=name, tenant=tenant,
+        resources=ResourceSpec(chips=chips, min_chips=min_chips,
+                               priority=priority, preemptible=preemptible),
+        runtime=RuntimeEnv(backend="shell"),
+        entry={"work_per_step": chips * 0.9, "comm_frac": 0.05},
+        total_steps=steps, estimated_duration_s=est_s or float(steps))
+    return Job(id=name, plan=compiler.compile(spec), submit_time=submit)
+
+
+def small_cluster():
+    return Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)   # 32 chips
+
+
+def rel_trace_cfg(seed=0, n_jobs=20):
+    """Failure-heavy little workload under the age model: hazards large
+    enough that a handful of incidents land inside the short ops window."""
+    return TraceConfig(
+        n_jobs=n_jobs, seed=seed, mean_gap_s=25.0, widths=(4, 8, 16, 32),
+        steps_min=40, steps_max=200, elastic_frac=0.4, priority_frac=0.2,
+        n_failures=1, n_stragglers=1, ops_start=50.0, ops_window=2500.0,
+        recover_s=(60.0, 120.0), slow_duration_s=(60.0, 150.0),
+        reliability=ReliabilityConfig(
+            age_days=(100.0, 2000.0), weibull_shape=1.5,
+            weibull_scale_days=1.5, transient_frac=0.6,
+            repair_transient_s=(60.0, 0.5), repair_hard_s=(400.0, 0.5)))
+
+
+# -- hazard curve --------------------------------------------------------------
+
+def test_hazard_monotone_in_node_age():
+    """Wear-out (shape > 1): hazard strictly increases with age; infant
+    mortality (shape < 1): strictly decreases; shape == 1 is memoryless."""
+    ages = [10.0, 50.0, 200.0, 800.0, 2000.0]
+    wear = [hazard_per_day(a, 1.6, 600.0) for a in ages]
+    assert all(b > a > 0 for a, b in zip(wear, wear[1:]))
+    infant = [hazard_per_day(a, 0.7, 600.0) for a in ages]
+    assert all(b < a for a, b in zip(infant, infant[1:]))
+    flat = [hazard_per_day(a, 1.0, 600.0) for a in ages]
+    assert all(h == pytest.approx(1.0 / 600.0) for h in flat)
+    # MTBF is the hazard inverse: old nodes fail sooner under wear-out
+    assert mtbf_days(2000.0, 1.6, 600.0) < mtbf_days(10.0, 1.6, 600.0)
+
+
+def test_cluster_hazard_monotone_in_age_and_failures():
+    c = small_cluster()
+    nid = "pod0/host000"
+    assert c.node_hazard_key(nid) == 0 and c.node_reliability(nid) == 1.0
+    c.set_node_age(nid, 400.0)
+    h_age = c.node_hazard_key(nid)
+    assert h_age > 0
+    c.set_node_age(nid, 1600.0)
+    assert c.node_hazard_key(nid) > h_age        # older => higher hazard
+    before = c.node_hazard_key(nid)
+    c.fail_node(nid)
+    assert c.node_hazard_key(nid) > before       # failures add hazard
+    assert c.node_reliability(nid) < 1.0
+    assert c.pod_reliability(0) < c.pod_reliability(1) == 1.0
+    c.check_counters()
+
+
+def test_survival_probability_decreases_with_duration_and_width():
+    c = small_cluster()
+    for nid in c.nodes:
+        c.set_node_age(nid, 1000.0)
+    s_short = c.survival_probability(3600.0, 4)
+    s_long = c.survival_probability(30 * 86400.0, 4)
+    s_wide = c.survival_probability(3600.0, 16)
+    assert 0.0 < s_long < s_short <= 1.0
+    assert s_wide < s_short
+    assert c.survival_probability(0.0, 4) == 1.0
+
+
+# -- trace schema / incident round-trip ----------------------------------------
+
+def test_incident_roundtrip_through_gzip_trace(tmp_path):
+    c = small_cluster()
+    tr = synthesize(rel_trace_cfg(seed=3), list(c.nodes))
+    assert tr.incidents, "hazard config must produce incidents"
+    assert len(tr.node_ages) == len(c.nodes)
+    assert any(e.kind == "incident" for e in tr.events)
+    # every incident mirrors an event carrying repair time + kind
+    by_key = {(e.node, e.time): e for e in tr.events if e.kind == "incident"}
+    for inc in tr.incidents:
+        ev = by_key[(inc.node, inc.start)]
+        assert ev.value == inc.repair_s
+        assert ev.info == inc.kind in ("transient", "hard")
+    path = str(tmp_path / "rel-trace.json.gz")
+    tr.save(path)
+    back = Trace.load(path)
+    assert back.to_dict() == tr.to_dict()
+    assert [dataclasses.asdict(i) for i in back.incidents] == \
+        [dataclasses.asdict(i) for i in tr.incidents]
+    assert back.node_ages == tr.node_ages
+
+
+def test_format1_trace_still_loads():
+    d = {"format": 1, "meta": {}, "events": [],
+         "jobs": [{"id": "j0", "submit_time": 0.0, "chips": 4,
+                   "total_steps": 10}]}
+    tr = Trace.from_dict(d)
+    assert tr.incidents == [] and tr.node_ages == {}
+    with pytest.raises(ValueError):
+        Trace.from_dict({"format": 3, "jobs": [], "events": []})
+
+
+def test_month_rel_preset_shape():
+    cfg = scale_preset("month-50k-rel", seed=2)
+    assert cfg.seed == 2
+    assert cfg.reliability is not None
+    assert cfg.reliability.weibull_shape > 1.0     # wear-out fleet
+    assert cfg.n_failures == 0                     # age model owns failures
+
+
+# -- health-state machine ------------------------------------------------------
+
+def test_health_states_and_counter_parity():
+    c = small_cluster()
+    n = c.hosts_per_pod * c.n_pods
+    assert c._health_counts[NodeHealth.HEALTHY] == n
+    c.fail_node("pod0/host000")
+    assert c.nodes["pod0/host000"].health is NodeHealth.REPAIRING
+    c.set_speed("pod0/host001", 0.5)
+    assert c.nodes["pod0/host001"].health is NodeHealth.DEGRADED
+    c.drain("pod0/host002")
+    assert c.nodes["pod0/host002"].health is NodeHealth.DRAINING
+    # precedence: a draining node that also slows stays DRAINING
+    c.set_speed("pod0/host002", 0.9)
+    assert c.nodes["pod0/host002"].health is NodeHealth.DRAINING
+    c.check_counters()
+    c.recover_node("pod0/host000")
+    c.set_speed("pod0/host001", 1.0)
+    c.set_speed("pod0/host002", 1.0)
+    c.drain("pod0/host002", False)
+    assert c._health_counts[NodeHealth.HEALTHY] == n
+    c.check_counters()
+
+
+def test_health_counters_survive_randomized_churn():
+    import random
+    rng = random.Random(99)
+    c = small_cluster()
+    nodes = list(c.nodes)
+    live, seq = [], 0
+    for step in range(400):
+        op = rng.random()
+        if op < 0.35:
+            got = c.try_allocate(f"j{seq}", rng.choice((1, 4, 8, 16)),
+                                 rng.random() < 0.8,
+                                 reliable=rng.random() < 0.5)
+            if got is not None:
+                live.append(f"j{seq}")
+            seq += 1
+        elif op < 0.55 and live:
+            c.release(live.pop(rng.randrange(len(live))))
+        elif op < 0.65:
+            for jid in c.fail_node(rng.choice(nodes)):
+                c.release(jid)
+                live.remove(jid)
+        elif op < 0.75:
+            c.recover_node(rng.choice(nodes))
+        elif op < 0.85:
+            c.set_speed(rng.choice(nodes), rng.choice((0.3, 0.8, 1.0)))
+        elif op < 0.95:
+            c.drain(rng.choice(nodes), rng.random() < 0.5)
+        else:
+            c.set_node_age(rng.choice(nodes), rng.uniform(0.0, 2000.0))
+        if step % 20 == 0:
+            c.check_counters()
+    c.check_counters()
+
+
+# -- failure-aware placement ---------------------------------------------------
+
+def test_reliable_placement_prefers_low_hazard_pod():
+    c = small_cluster()
+    for h in range(4):                   # pod1 is an aged, flaky rack
+        c.set_node_age(f"pod1/host{h:03d}", 1900.0)
+    alloc = c.try_allocate("wide", 8, reliable=True)
+    assert {c.nodes[nid].pod for nid, _ in alloc} == {0}
+    # default placement ignores the signal: ties broken by free count only
+    c2 = small_cluster()
+    for h in range(4):
+        c2.set_node_age(f"pod1/host{h:03d}", 1900.0)
+    c2.try_allocate("seed", 4)           # make pod0/pod1 free counts differ
+    assert c2.free_chips(0) < c2.free_chips(1)
+    alloc2 = c2.try_allocate("wide", 8)
+    assert {c2.nodes[nid].pod for nid, _ in alloc2} == {1}
+
+
+def test_reliable_placement_breaks_ties_by_node_hazard():
+    c = small_cluster()
+    c.set_node_age("pod0/host000", 1500.0)
+    c.set_node_age("pod0/host001", 500.0)
+    for h in range(4):                   # pod1 worse in aggregate
+        c.set_node_age(f"pod1/host{h:03d}", 1900.0)
+    # pod0 wins on pod hazard; free counts tie within it, so the reliable
+    # order is hazard-ascending then id: the two fresh hosts go first
+    alloc = c.try_allocate("j", 8, reliable=True)
+    assert [nid for nid, _ in alloc] == ["pod0/host002", "pod0/host003"]
+    c.check_counters()
+
+
+def test_policies_flag_long_wide_jobs_for_reliable_placement(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=2, hosts_per_pod=8, chips_per_host=4)   # 64 chips
+    pol = make_policy("fifo", reliability_aware=True)
+    wide = mkjob(comp, "wide", 16, 2000, submit=0.0, est_s=2000.0)
+    narrow = mkjob(comp, "narrow", 4, 2000, submit=1.0, est_s=2000.0)
+    short = mkjob(comp, "short", 16, 20, submit=2.0, est_s=20.0)
+    acts = pol.schedule(5.0, [wide, narrow, short], [], c)
+    flags = {a.job_id: a.reliable for a in acts if isinstance(a, Start)}
+    assert flags == {"wide": True, "narrow": False, "short": False}
+    # default policies never set the flag
+    acts = make_policy("fifo").schedule(
+        5.0, [mkjob(mkcompiler(tmp_path / "d"), "w2", 16, 2000,
+                    est_s=2000.0)], [], c)
+    assert [a.reliable for a in acts] == [False]
+
+
+def test_goodput_survival_weighting_shifts_chips_to_short_jobs(tmp_path):
+    """On a fleet with failure risk, the marginal chip is worth more on the
+    job that will finish (and bank) its work before a likely failure: the
+    reliability-aware split gives the short job at least as many chips."""
+    def split(rel_aware):
+        comp = mkcompiler(tmp_path / f"rel{rel_aware}")
+        c = small_cluster()
+        for nid in c.nodes:
+            c.set_node_age(nid, 2000.0)
+        c.AGE_HAZARD_PER_DAY = 0.5       # very flaky fleet
+        for nid in c.nodes:              # re-derive keys under the new rate
+            c.set_node_age(nid, 2000.0)
+        pol = make_policy("goodput", reliability_aware=rel_aware)
+        short = mkjob(comp, "short", 32, 50, min_chips=4, submit=0.0)
+        long = mkjob(comp, "long", 32, 50000, min_chips=4, submit=0.0)
+        acts = pol.schedule(0.0, [short, long], [], c)
+        return {a.job_id: a.chips for a in acts if isinstance(a, Start)}
+    plain, aware = split(False), split(True)
+    assert sum(plain.values()) == sum(aware.values()) == 32
+    assert aware["short"] >= plain["short"]
+    assert aware["short"] > aware["long"]
+
+
+# -- sim repair lifecycle ------------------------------------------------------
+
+def run_rel_trace(tmp_path, policy, *, engine="event", rel_aware=True,
+                  seed=0):
+    comp = mkcompiler(tmp_path / f"{policy}-{engine}-{rel_aware}")
+    c = small_cluster()
+    pol = make_policy(policy, reliability_aware=rel_aware)
+    sim = ClusterSim(c, pol, SimConfig(
+        tick=2.0, checkpoint_interval_s=30, checkpoint_cost_s=2,
+        restart_cost_s=10, engine=engine))
+    tr = synthesize(rel_trace_cfg(seed), list(c.nodes))
+    tr.install(sim, comp)
+    metrics = sim.run(until=horizon(tr))
+    return sim, tr, metrics
+
+
+def test_sim_repairs_nodes_and_reports_reliability_metrics(tmp_path):
+    sim, tr, m = run_rel_trace(tmp_path, "fifo")
+    assert m["completed"] == m["jobs"] == len(tr.jobs)
+    # every incident counts once unless it hit a node already down (possible
+    # when the memoryless process coexists); the uniform failure adds one
+    assert 0 < m["failures"] <= len(tr.incidents) + 1
+    assert m["mttf_hours"] > 0
+    assert 0 < m["repair_hours"] \
+        <= sum(i.repair_s for i in tr.incidents) / 3600.0 + 1e-9
+    assert 0 <= m["restarts_avoided"] <= m["failures"]
+    # ages were installed before any scheduling happened
+    for nid, age in tr.node_ages.items():
+        assert sim.cluster.nodes[nid].age_days == age
+    # every incident node is back up once its repair completed
+    assert all(n.healthy for n in sim.cluster.nodes.values())
+    sim.cluster.check_counters()
+    # admission rates cover every tenant that submitted
+    tenants = {j.tenant for j in tr.jobs}
+    for t in tenants:
+        assert 0.0 < m[f"admission_rate_{t}"] <= 1.0
+
+
+def test_incident_keeps_node_down_until_repair(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(engine="event"))
+    sim.submit(mkjob(comp, "j", 4, 50, submit=0.0))
+    sim.inject(SimEvent(10.0, "incident", "pod1/host000", 500.0, "hard"))
+    sim.submit(mkjob(comp, "probe", 1, 10, submit=1000.0))
+    sim.run(until=2000.0)
+    assert sim.cluster.nodes["pod1/host000"].healthy        # repaired
+    assert sim.cluster.nodes["pod1/host000"].fail_count == 1
+    assert sim.metrics()["repair_hours"] == pytest.approx(500.0 / 3600.0)
+    assert sim.metrics()["failures"] == 1.0
+
+
+@pytest.mark.parametrize("engine", ["event", "tick"])
+def test_memoryless_recover_cannot_interrupt_repair(tmp_path, engine):
+    """A hard incident owns its node until the repair completes: a dead node
+    cannot fail again, and an unrelated memoryless recover event landing
+    inside the repair window must not resurrect it early."""
+    comp = mkcompiler(tmp_path / engine)
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(engine=engine))
+    nid = "pod1/host000"
+    sim.submit(mkjob(comp, "j", 4, 50, submit=0.0))
+    sim.inject(SimEvent(10.0, "incident", nid, 1000.0, "hard"))
+    sim.inject(SimEvent(20.0, "fail_node", nid))          # already down
+    sim.inject(SimEvent(80.0, "recover_node", nid))       # mid-repair
+    # probe arrives while the repair should still hold the node down
+    sim.submit(mkjob(comp, "probe", 32, 10, submit=500.0))
+    sim.run(until=3000.0)
+    m = sim.metrics()
+    assert m["failures"] == 1.0                # the dead node didn't re-fail
+    assert m["repair_hours"] == pytest.approx(1000.0 / 3600.0)
+    assert sim.cluster.nodes[nid].fail_count == 1
+    assert sim.cluster.nodes[nid].healthy      # repaired by its own event
+    # the 32-chip probe needs every node: it can only have started after
+    # the repair completed at t=1010, not at the bogus t=80 recover
+    assert sim.jobs["probe"].first_start >= 1010.0
+    sim.cluster.check_counters()
+
+
+@pytest.mark.parametrize("policy", ["fifo", "priority"])
+def test_incident_engine_parity(tmp_path, policy):
+    """Tick and event engines agree on the incident/repair lifecycle (same
+    completions/failure counts, close JCT) on an age-model trace."""
+    metrics = {}
+    for engine in ("tick", "event"):
+        _, _, metrics[engine] = run_rel_trace(
+            tmp_path, policy, engine=engine, rel_aware=False, seed=1)
+    mt, me = metrics["tick"], metrics["event"]
+    assert me["completed"] == mt["completed"]
+    assert me["failures"] == mt["failures"]
+    assert me["repair_hours"] == pytest.approx(mt["repair_hours"])
+    assert me["avg_jct"] == pytest.approx(mt["avg_jct"], rel=0.1)
