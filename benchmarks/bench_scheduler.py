@@ -41,7 +41,9 @@ import time
 from typing import Dict, List, Tuple
 
 from repro.core import Cluster, ClusterSim, SimConfig, make_policy
+from repro.core.cluster import TierConfig
 from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.core.scheduler import TenantPlan
 from repro.data.trace import (SCALE_PRESETS, Trace, TraceConfig, horizon,
                               scale_preset, synthesize)
 
@@ -51,8 +53,25 @@ DEFAULT_TRACE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                  "traces")
 
 
-def make_cluster() -> Cluster:
-    return Cluster(n_pods=2, hosts_per_pod=64, chips_per_host=4)
+def make_cluster(cfg: TraceConfig = None) -> Cluster:
+    """The benchmark fleet.  A trace config with per-host tier pools (the
+    format-3 mixed presets) carves those chips into MIG / shared slots; the
+    legacy presets keep the all-exclusive shape byte-identically."""
+    tiers = None
+    if cfg is not None and (cfg.mig_chips_per_host
+                            or cfg.shared_chips_per_host):
+        tiers = TierConfig(mig_chips_per_host=cfg.mig_chips_per_host,
+                           shared_chips_per_host=cfg.shared_chips_per_host)
+    return Cluster(n_pods=2, hosts_per_pod=64, chips_per_host=4, tiers=tiers)
+
+
+# tenant plans exercised on the tiered (mixed) points: lab-a pays for a
+# priority boost, lab-c's interactive tier is capped so notebooks can't
+# crowd out the shared slots.  Legacy points run without plans.
+MIXED_TENANT_PLANS = {
+    "lab-a": TenantPlan(priority_boost=1),
+    "lab-c": TenantPlan(max_per_tier={"shared": 24, "mig": 24}),
+}
 
 
 def artifact_path(trace_dir: str, name: str, seed: int) -> str:
@@ -88,7 +107,7 @@ def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
             return trace
         print(f"  [trace artifact {os.path.basename(path)} is stale "
               f"(config mismatch); resynthesizing]")
-    trace = synthesize(cfg, list(make_cluster().nodes))
+    trace = synthesize(cfg, list(make_cluster(cfg).nodes))
     if save and not overridden:
         os.makedirs(trace_dir, exist_ok=True)
         trace.save(path)
@@ -97,9 +116,12 @@ def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
 
 
 def run_policy(policy: str, traces: List[Trace], engine: str = "event",
-               reliability_aware: bool = False) -> Dict:
+               reliability_aware: bool = False,
+               trace_cfg: TraceConfig = None) -> Dict:
     agg: Dict[str, float] = {}
     wall = 0.0
+    tiered = trace_cfg is not None and (trace_cfg.mig_chips_per_host
+                                        or trace_cfg.shared_chips_per_host)
     for trace in traces:
         # collect the (cyclic) sim/job graphs of earlier runs up front: at
         # month scale the gen-2 collections they otherwise trigger land in
@@ -107,12 +129,13 @@ def run_policy(policy: str, traces: List[Trace], engine: str = "event",
         gc.collect()
         with tempfile.TemporaryDirectory() as td:
             compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
-            cluster = make_cluster()
+            cluster = make_cluster(trace_cfg)
             pol = make_policy(policy,
                               quotas={"lab-c": 192},
                               tenant_weights={"lab-a": 2, "lab-b": 1,
                                               "lab-c": 1},
-                              reliability_aware=reliability_aware)
+                              reliability_aware=reliability_aware,
+                              plans=MIXED_TENANT_PLANS if tiered else None)
             sim = ClusterSim(cluster, pol, SimConfig(
                 tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
                 restart_cost_s=15, engine=engine))
@@ -143,18 +166,21 @@ def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
     print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
           f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
           f"{'preempt':>8s} {'restarts':>8s} {'mttf_h':>8s} "
-          f"{'repair_h':>8s} {'avoided':>7s} {'wall_s':>8s}")
+          f"{'repair_h':>8s} {'avoided':>7s} {'sh_occ':>6s} "
+          f"{'spot_pre':>8s} {'frag':>6s} {'wall_s':>8s}")
     rows: List[Tuple[str, Dict]] = []
     for pol in policies:
         m = run_policy(pol, traces, engine=engine,
-                       reliability_aware=reliability_aware)
+                       reliability_aware=reliability_aware,
+                       trace_cfg=trace_cfg)
         rows.append((pol, m))
         print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
               f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
               f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
               f"{m['restarts']:8.1f} {m['mttf_hours']:8.1f} "
               f"{m['repair_hours']:8.2f} {m['restarts_avoided']:7.1f} "
-              f"{m['wall_s']:8.3f}")
+              f"{m['shared_occupancy']:6.3f} {m['spot_preemptions']:8.1f} "
+              f"{m['frag_chips']:6.2f} {m['wall_s']:8.3f}")
     return {
         "n_jobs": trace_cfg.n_jobs,
         "seeds": list(seeds),
@@ -181,6 +207,22 @@ reliability metrics columns (also keys in BENCH_scheduler.json results):
   reliable pods/nodes and goodput weights grants by pod locality x survival
   probability over the predicted remaining runtime.  Memoryless presets
   replay byte-identically to previous snapshots.
+
+isolation-tier metrics columns (format-3 mixed presets; zero elsewhere):
+  shared_occupancy  time-weighted mean occupancy of the shared
+                    (time-sliced) slot pool in [0, 1]
+  spot_preemptions  spot leases reclaimed for blocked on-demand jobs
+                    (spot usage is priced by this preemption risk)
+  frag_chips        time-weighted mean count of partially-occupied
+                    fractional chips — the MIG/shared packing-quality
+                    signal (lower is better at equal occupancy)
+  Presets with per-host tier pools (e.g. month-50k-mixed) carve 1 chip/host
+  into 1/7-chip MIG slices and 1 chip/host into time-sliced shared slots;
+  ~30% of jobs are sub-chip interactive sessions scheduled via a FIFO
+  fractional lane, 10% of batch jobs run as discounted spot, and tenant
+  plans (per-tier concurrency caps, priority boost) are exercised on the
+  lab tenants.  Whole-chip placement still takes the exact bucketed path,
+  so legacy presets replay byte-identically.
 
 trace-artifact replay workflow:
   Scale points replay committed artifacts from --trace-dir

@@ -13,26 +13,39 @@ from repro.models import init_params, model_defs
 from repro.serve import ServeEngine
 
 
-def main(n_requests: int = 12, max_new: int = 8):
-    cfg = get_config("tacc-100m", smoke=True)
-    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+def run_bench(n_requests: int = 12, max_new: int = 8, *, max_seq: int = 48,
+              cfg=None, params=None):
+    """One bench pass (importable so tier-1 can smoke it): serve the same
+    prompt set with continuous batching and sequentially, returning both
+    engines and result lists for invariant checks."""
+    if cfg is None:
+        cfg = get_config("tacc-100m", smoke=True)
+    if params is None:
+        params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
     rng = np.random.RandomState(0)
     prompts = [list(rng.randint(1, cfg.vocab_size, rng.randint(2, 10)))
                for _ in range(n_requests)]
 
     # continuous batching
-    eng = ServeEngine(cfg, params, max_batch=4, max_seq=48)
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=max_seq)
     t0 = time.time()
     res = eng.run(prompts, max_new=max_new)
     t_cb = time.time() - t0
-    steps_cb = eng._steps
 
     # sequential (batch=1)
-    eng1 = ServeEngine(cfg, params, max_batch=1, max_seq=48)
+    eng1 = ServeEngine(cfg, params, max_batch=1, max_seq=max_seq)
     t0 = time.time()
     res1 = eng1.run(prompts, max_new=max_new)
     t_seq = time.time() - t0
-    steps_seq = eng1._steps
+
+    return {"batched": (eng, res, t_cb), "sequential": (eng1, res1, t_seq)}
+
+
+def main(n_requests: int = 12, max_new: int = 8):
+    out = run_bench(n_requests, max_new)
+    eng, _res, t_cb = out["batched"]
+    eng1, _res1, t_seq = out["sequential"]
+    steps_cb, steps_seq = eng._steps, eng1._steps
 
     tok = n_requests * max_new
     print("name,us_per_call,derived")

@@ -11,9 +11,9 @@
 """
 from repro.core.schema import ResourceSpec, RuntimeEnv, TaskSpec, SpecError
 from repro.core.compiler import ArtifactStore, ExecutionPlan, TaskCompiler
-from repro.core.cluster import Cluster, Node, NodeHealth
+from repro.core.cluster import Cluster, Node, NodeHealth, TierConfig
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
-                                  Start, make_policy, POLICIES)
+                                  Start, TenantPlan, make_policy, POLICIES)
 from repro.core.sim import ClusterSim, SimConfig, SimEvent
 from repro.core.executor import LocalExecutor
 from repro.core.service import TACC

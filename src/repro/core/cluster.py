@@ -35,6 +35,23 @@ the fleet has no reliability signal (all ages 0, no failures).  Node health
 is a derived four-state machine (healthy / degraded / draining / repairing)
 with O(1) incremental per-state counts.
 
+Multi-resource allocator (isolation tiers): node capacity is a vector of
+typed slots.  A :class:`TierConfig` carves each host's chips into three
+static pools — ``exclusive`` whole chips (the gang path above, unchanged),
+``mig`` chips split into 1/``MIG_SLICES`` fractional partitions, and
+``shared`` chips time-sliced into ``SHARED_SLOTS`` oversubscribed slots.
+Sub-chip bookkeeping is integer *quanta* (slices / slots), never floats, so
+all counters stay exact.  Fractional demands are at most one chip and land
+on a single chip via global best-fit: the chip with the smallest
+sufficient free-quanta count, ties broken by lowest node id then chip
+index (``reliable=True`` prefers low hazard before id).  Placement is
+O(log chips) via per-tier bucketed free lists keyed by free-quanta count,
+with the same lazy generation-stamped heap entries as the exclusive path.
+The default ``TierConfig()`` reserves zero mig/shared chips, making a
+tiered cluster bit-for-bit identical to the historical whole-chip one —
+the load-bearing property that lets every committed trace artifact replay
+byte-identically through this allocator.
+
 Invariants (property-tested, plus ``check_counters`` in the sim tests):
   - sum of per-node allocations never exceeds node capacity,
   - unhealthy/draining nodes never receive allocations,
@@ -42,15 +59,51 @@ Invariants (property-tested, plus ``check_counters`` in the sim tests):
   - incremental counters always equal the brute-force node scan,
   - every live bucket entry sits in the bucket of its node's current free
     count, and every allocatable node has exactly one live entry,
-  - health-state counts and per-pod hazard sums equal the node scan.
+  - health-state counts and per-pod hazard sums equal the node scan,
+  - per-tier free/used/fragmentation counters and per-chip bucket entries
+    equal the brute-force chip scan, and per-chip used quanta equal the
+    sum of the fractional allocations living on that chip.
 """
 from __future__ import annotations
 
 import heapq
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from enum import Enum
+from fractions import Fraction
 from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.schema import MIG_SLICES, SHARED_SLOTS
+
+FRACTIONAL_TIERS = ("mig", "shared")
+
+
+@dataclass(frozen=True)
+class TierConfig:
+    """Static per-host split of chips into isolation-tier pools.
+
+    The default (zero mig/shared chips) is the historical whole-chip
+    cluster; sub-chip granularities come from the schema layer so demand
+    quantization and capacity quantization can never disagree.
+    """
+    mig_chips_per_host: int = 0
+    shared_chips_per_host: int = 0
+    mig_slices: int = MIG_SLICES        # quanta per mig chip
+    shared_slots: int = SHARED_SLOTS    # quanta per shared chip (oversub)
+
+    def quanta_per_chip(self, tier: str) -> int:
+        if tier == "mig":
+            return self.mig_slices
+        if tier == "shared":
+            return self.shared_slots
+        raise ValueError(f"not a fractional tier: {tier!r}")
+
+    def chips_per_host(self, tier: str) -> int:
+        if tier == "mig":
+            return self.mig_chips_per_host
+        if tier == "shared":
+            return self.shared_chips_per_host
+        raise ValueError(f"not a fractional tier: {tier!r}")
 
 
 class NodeHealth(str, Enum):
@@ -73,10 +126,28 @@ class Node:
     speed: float = 1.0            # <1.0 = straggler
     age_days: float = 0.0         # install age at sim start
     fail_count: int = 0           # lifetime failures observed
+    mig_chips: int = 0            # chips carved into MIG partitions
+    shared_chips: int = 0         # chips carved into time-sliced slots
+    # free quanta per fractional chip (index = chip on this host); these
+    # lists always hold the *true* free counts, even while the node is down
+    # — availability gating lives in the cluster's counters/buckets
+    mig_free: List[int] = field(default_factory=list)
+    shared_free: List[int] = field(default_factory=list)
+
+    @property
+    def exclusive_chips(self) -> int:
+        return self.chips - self.mig_chips - self.shared_chips
+
+    @property
+    def avail(self) -> bool:
+        return self.healthy and not self.draining
 
     @property
     def free(self) -> int:
-        return 0 if (not self.healthy or self.draining) else self.chips - self.used
+        return 0 if not self.avail else self.exclusive_chips - self.used
+
+    def tier_free_list(self, tier: str) -> List[int]:
+        return self.mig_free if tier == "mig" else self.shared_free
 
     @property
     def health(self) -> NodeHealth:
@@ -89,7 +160,12 @@ class Node:
         return NodeHealth.HEALTHY
 
 
-Allocation = List[Tuple[str, int]]    # [(node_id, n_chips), ...]
+# [(node_id, n_chips), ...]; n_chips is an int for exclusive gangs and an
+# exact Fraction (< 1 chip) for fractional single-chip placements
+Allocation = List[Tuple[str, int]]
+
+# fractional allocation record: (tier, node_id, chip_idx, quanta)
+FracAlloc = Tuple[str, str, int, int]
 
 
 class Cluster:
@@ -105,20 +181,37 @@ class Cluster:
     _HKEY_SCALE = 1e9             # hazard/day -> integer key quantization
 
     def __init__(self, n_pods: int = 2, hosts_per_pod: int = 64,
-                 chips_per_host: int = 4):
+                 chips_per_host: int = 4,
+                 tiers: Optional[TierConfig] = None):
         self.n_pods = n_pods
         self.hosts_per_pod = hosts_per_pod
         self.chips_per_host = chips_per_host
+        self.tiers = tiers or TierConfig()
+        frac_per_host = (self.tiers.mig_chips_per_host
+                         + self.tiers.shared_chips_per_host)
+        if frac_per_host > chips_per_host:
+            raise ValueError("tier pools exceed chips_per_host")
+        exc_per_host = chips_per_host - frac_per_host
         self.nodes: Dict[str, Node] = {}
         for p in range(n_pods):
             for h in range(hosts_per_pod):
                 nid = f"pod{p}/host{h:03d}"
-                self.nodes[nid] = Node(nid, p, chips_per_host)
+                self.nodes[nid] = Node(
+                    nid, p, chips_per_host,
+                    mig_chips=self.tiers.mig_chips_per_host,
+                    shared_chips=self.tiers.shared_chips_per_host,
+                    mig_free=[self.tiers.mig_slices] *
+                    self.tiers.mig_chips_per_host,
+                    shared_free=[self.tiers.shared_slots] *
+                    self.tiers.shared_chips_per_host)
         self.allocations: Dict[str, Allocation] = {}
-        # incremental capacity counters + reverse indices (see module doc)
-        self._free_total = n_pods * hosts_per_pod * chips_per_host
-        self._pod_free = [hosts_per_pod * chips_per_host] * n_pods
-        self._healthy_chips = self._free_total
+        # incremental capacity counters + reverse indices (see module doc);
+        # free/used counters cover the exclusive pool only — fractional
+        # tiers have their own quanta counters below
+        self._free_total = n_pods * hosts_per_pod * exc_per_host
+        self._pod_free = [hosts_per_pod * exc_per_host] * n_pods
+        self._healthy_chips = n_pods * hosts_per_pod * chips_per_host
+        self._healthy_exc = self._free_total
         self._used_total = 0
         self._node_jobs: Dict[str, Set[str]] = {nid: set() for nid in self.nodes}
         self.abnormal_nodes: Set[str] = set()     # speed != 1.0
@@ -128,8 +221,36 @@ class Cluster:
         self._node_gen: Dict[str, int] = {nid: 0 for nid in self.nodes}
         self._buckets: List[List[list]] = [
             [[] for _ in range(chips_per_host + 1)] for _ in range(n_pods)]
-        for nid, node in self.nodes.items():
-            heapq.heappush(self._buckets[node.pod][chips_per_host], (nid, 0))
+        if exc_per_host > 0:
+            for nid, node in self.nodes.items():
+                heapq.heappush(self._buckets[node.pod][exc_per_host], (nid, 0))
+        # fractional tiers: per-(tier, node, chip) generation stamps and one
+        # *global* bucketed free list per tier — _fbuckets[tier][f] is a lazy
+        # min-heap of (node_id, chip_idx, gen) over chips with free == f
+        # quanta; best-fit pops the smallest sufficient bucket.  Counters:
+        # _tier_free is allocatable quanta (0 while a node is down/draining),
+        # _tier_used is health-independent occupancy, _frag counts partially
+        # used fractional chips.
+        self._frac_alloc: Dict[str, FracAlloc] = {}
+        self._fgen: Dict[Tuple[str, str, int], int] = {}
+        self._fbuckets: Dict[str, List[list]] = {}
+        self._rfbuckets: Optional[Dict[str, List[list]]] = None
+        self._tier_free: Dict[str, List[int]] = {}
+        self._tier_cap: Dict[str, int] = {}
+        self._tier_used: Dict[str, int] = {}
+        self._frag = 0
+        for tier in FRACTIONAL_TIERS:
+            per_chip = self.tiers.quanta_per_chip(tier)
+            n_chips = self.tiers.chips_per_host(tier)
+            self._fbuckets[tier] = [[] for _ in range(per_chip + 1)]
+            self._tier_free[tier] = [hosts_per_pod * n_chips * per_chip] * n_pods
+            self._tier_cap[tier] = n_pods * hosts_per_pod * n_chips * per_chip
+            self._tier_used[tier] = 0
+            if n_chips:
+                for nid in self.nodes:
+                    for idx in range(n_chips):
+                        heapq.heappush(self._fbuckets[tier][per_chip],
+                                       (nid, idx, 0))
         # health-state counts (O(1) per transition, parity-checked)
         self._health_counts: Dict[NodeHealth, int] = {
             h: 0 for h in NodeHealth}
@@ -146,8 +267,10 @@ class Cluster:
         """Apply ``fn(node)`` keeping counters and bucket lists in sync."""
         free0 = node.free
         used0 = node.used
+        healthy0 = node.healthy
         cap0 = node.chips if node.healthy else 0
         h0 = node.health
+        avail0 = node.avail
         fn(node)
         d_free = node.free - free0
         if d_free:
@@ -163,10 +286,61 @@ class Cluster:
                         (self._node_hkey[node.id], node.id, gen))
         self._used_total += node.used - used0
         self._healthy_chips += (node.chips if node.healthy else 0) - cap0
+        if node.healthy != healthy0:
+            self._healthy_exc += node.exclusive_chips if node.healthy \
+                else -node.exclusive_chips
         h1 = node.health
         if h1 is not h0:
             self._health_counts[h0] -= 1
             self._health_counts[h1] += 1
+        if avail0 != node.avail:
+            self._frac_avail_flip(node, node.avail)
+
+    def _frac_avail_flip(self, node: Node, now_avail: bool) -> None:
+        """A node entered/left the allocatable state: move its fractional
+        chips' (true) free quanta in or out of the allocatable counters and
+        kill/recreate their bucket entries.  No-op on untiered clusters."""
+        for tier in FRACTIONAL_TIERS:
+            lst = node.tier_free_list(tier)
+            if not lst:
+                continue
+            total = sum(lst)
+            self._tier_free[tier][node.pod] += total if now_avail else -total
+            for idx, f in enumerate(lst):
+                key = (tier, node.id, idx)
+                gen = self._fgen[key] = self._fgen.get(key, 0) + 1
+                if now_avail and f > 0:
+                    heapq.heappush(self._fbuckets[tier][f],
+                                   (node.id, idx, gen))
+                    if self._rfbuckets is not None:
+                        heapq.heappush(
+                            self._rfbuckets[tier][f],
+                            (self._node_hkey[node.id], node.id, idx, gen))
+
+    def _frac_set(self, node: Node, tier: str, idx: int,
+                  new_free: int) -> None:
+        """Set a fractional chip's free quanta, keeping the tier counters,
+        fragmentation count and bucket lists in sync (single bookkeeping
+        path for fractional allocate + release)."""
+        lst = node.tier_free_list(tier)
+        old = lst[idx]
+        if new_free == old:
+            return
+        cap = self.tiers.quanta_per_chip(tier)
+        self._tier_used[tier] += old - new_free
+        self._frag += (0 < new_free < cap) - (0 < old < cap)
+        lst[idx] = new_free
+        if node.avail:
+            self._tier_free[tier][node.pod] += new_free - old
+            key = (tier, node.id, idx)
+            gen = self._fgen[key] = self._fgen.get(key, 0) + 1
+            if new_free > 0:
+                heapq.heappush(self._fbuckets[tier][new_free],
+                               (node.id, idx, gen))
+                if self._rfbuckets is not None:
+                    heapq.heappush(
+                        self._rfbuckets[tier][new_free],
+                        (self._node_hkey[node.id], node.id, idx, gen))
 
     # -- capacity ------------------------------------------------------------
 
@@ -187,6 +361,35 @@ class Cluster:
     @property
     def pod_capacity_chips(self) -> int:
         return self.hosts_per_pod * self.chips_per_host
+
+    # -- fractional-tier capacity -------------------------------------------
+
+    def exclusive_capacity(self) -> int:
+        """Exclusive-pool chips on healthy nodes (== total_chips untiered)."""
+        return self._healthy_exc
+
+    def free_slots(self, tier: str, pod: Optional[int] = None) -> int:
+        """Allocatable free quanta in a fractional tier (O(1))."""
+        return sum(self._tier_free[tier]) if pod is None \
+            else self._tier_free[tier][pod]
+
+    def tier_capacity(self, tier: str) -> int:
+        """Physical quanta capacity of a fractional tier (fleet-wide)."""
+        return self._tier_cap[tier]
+
+    def tier_occupancy(self, tier: str) -> float:
+        """Used / physical quanta for a tier in [0, 1] (health-independent,
+        so a down node's residents still count as occupying)."""
+        cap = self._tier_cap[tier]
+        return self._tier_used[tier] / cap if cap else 0.0
+
+    def shared_occupancy(self) -> float:
+        return self.tier_occupancy("shared")
+
+    def frag_chips(self) -> int:
+        """Fractional chips that are partially used (0 < used < capacity) —
+        the stranded-capacity signal the bench reports."""
+        return self._frag
 
     # -- reliability ---------------------------------------------------------
 
@@ -222,6 +425,19 @@ class Cluster:
             if self._rbuckets is not None:
                 heapq.heappush(self._rbuckets[node.pod][node.free],
                                (new, node.id, gen))
+        if self._rfbuckets is not None and node.avail:
+            # reliability-ordered fractional entries carry the stale hazard
+            # key: re-stamp this node's free chips in both orders
+            for tier in FRACTIONAL_TIERS:
+                for idx, f in enumerate(node.tier_free_list(tier)):
+                    if f <= 0:
+                        continue
+                    key = (tier, node.id, idx)
+                    g = self._fgen[key] = self._fgen.get(key, 0) + 1
+                    heapq.heappush(self._fbuckets[tier][f],
+                                   (node.id, idx, g))
+                    heapq.heappush(self._rfbuckets[tier][f],
+                                   (new, node.id, idx, g))
 
     def set_node_age(self, node_id: str, age_days: float) -> None:
         node = self.nodes[node_id]
@@ -259,6 +475,23 @@ class Cluster:
                 heapq.heappush(
                     self._rbuckets[node.pod][node.free],
                     (self._node_hkey[nid], nid, self._node_gen[nid]))
+
+    def _ensure_rfbuckets(self) -> None:
+        if self._rfbuckets is not None:
+            return
+        self._rfbuckets = {
+            tier: [[] for _ in range(self.tiers.quanta_per_chip(tier) + 1)]
+            for tier in FRACTIONAL_TIERS}
+        for nid, node in self.nodes.items():
+            if not node.avail:
+                continue
+            for tier in FRACTIONAL_TIERS:
+                for idx, f in enumerate(node.tier_free_list(tier)):
+                    if f > 0:
+                        heapq.heappush(
+                            self._rfbuckets[tier][f],
+                            (self._node_hkey[nid], nid, idx,
+                             self._fgen.get((tier, nid, idx), 0)))
 
     def check_counters(self) -> None:
         """Assert the incremental counters match a brute-force node scan."""
@@ -300,6 +533,47 @@ class Cluster:
                              if gen == self._node_gen[nid]}
                     rscan = {(self._node_hkey[nid], nid) for nid in scan}
                     assert rlive == rscan, (p, f, rlive, rscan)
+        # fractional tiers: counters, fragmentation, per-chip used quanta and
+        # bucket entries all equal the brute-force chip scan
+        assert self._healthy_exc == sum(
+            n.exclusive_chips for n in self.nodes.values() if n.healthy)
+        frac_used: Dict[Tuple[str, str, int], int] = {}
+        for jid, (tier, nid, idx, q) in self._frac_alloc.items():
+            frac_used[(tier, nid, idx)] = frac_used.get((tier, nid, idx), 0) + q
+            assert jid in self._node_jobs[nid], jid
+        scan_frag = 0
+        for tier in FRACTIONAL_TIERS:
+            cap = self.tiers.quanta_per_chip(tier)
+            for p in range(self.n_pods):
+                assert self._tier_free[tier][p] == sum(
+                    sum(n.tier_free_list(tier))
+                    for n in self.nodes.values()
+                    if n.pod == p and n.avail), (tier, p)
+            assert self._tier_used[tier] == sum(
+                cap - f for n in self.nodes.values()
+                for f in n.tier_free_list(tier)), tier
+            for nid, n in self.nodes.items():
+                for idx, f in enumerate(n.tier_free_list(tier)):
+                    assert 0 <= f <= cap, (tier, nid, idx, f)
+                    assert cap - f == frac_used.get((tier, nid, idx), 0), \
+                        (tier, nid, idx)
+                    scan_frag += 0 < f < cap
+            for f in range(1, cap + 1):
+                flive = {(nid, idx) for nid, idx, gen in self._fbuckets[tier][f]
+                         if gen == self._fgen.get((tier, nid, idx), 0)}
+                fscan = {(nid, idx) for nid, n in self.nodes.items()
+                         if n.avail
+                         for idx, ff in enumerate(n.tier_free_list(tier))
+                         if ff == f}
+                assert flive == fscan, (tier, f, flive, fscan)
+                if self._rfbuckets is not None:
+                    rflive = {(hk, nid, idx)
+                              for hk, nid, idx, gen in self._rfbuckets[tier][f]
+                              if gen == self._fgen.get((tier, nid, idx), 0)}
+                    rfscan = {(self._node_hkey[nid], nid, idx)
+                              for nid, idx in fscan}
+                    assert rflive == rfscan, (tier, f, rflive, rfscan)
+        assert self._frag == scan_frag, (self._frag, scan_frag)
 
     # -- allocation ----------------------------------------------------------
 
@@ -313,7 +587,7 @@ class Cluster:
         id)`` — identical to the default order when the fleet carries no
         reliability signal.
         """
-        if job_id in self.allocations:
+        if job_id in self.allocations or job_id in self._frac_alloc:
             raise ValueError(f"{job_id} already allocated")
         if chips > self.free_chips():
             return None
@@ -381,7 +655,64 @@ class Cluster:
                 n, "used", n.used + k))
         return picked
 
+    def try_allocate_fractional(self, job_id: str, tier: str, quanta: int,
+                                reliable: bool = False
+                                ) -> Optional[Allocation]:
+        """Place a sub-chip demand of ``quanta`` tier-slots on one chip.
+
+        Global best-fit: the chip with the smallest free-quanta count that
+        still fits, ties broken by lowest node id then chip index —
+        identical to a brute-force ``(free, id, idx)`` scan of every tier
+        chip.  ``reliable=True`` breaks free-count ties by ascending hazard
+        key first (``(free, hazard, id, idx)`` scan order).  Returns the
+        allocation as ``[(node_id, Fraction(quanta, quanta_per_chip))]`` or
+        None if no chip fits.
+        """
+        if job_id in self.allocations or job_id in self._frac_alloc:
+            raise ValueError(f"{job_id} already allocated")
+        if tier not in FRACTIONAL_TIERS:
+            raise ValueError(f"not a fractional tier: {tier!r}")
+        per_chip = self.tiers.quanta_per_chip(tier)
+        if not 1 <= quanta <= per_chip:
+            raise ValueError(f"quanta {quanta} out of range for {tier}")
+        if reliable:
+            self._ensure_rfbuckets()
+            buckets = self._rfbuckets[tier]
+        else:
+            buckets = self._fbuckets[tier]
+        for f in range(quanta, per_chip + 1):
+            heap = buckets[f]
+            while heap:
+                entry = heapq.heappop(heap)
+                nid, idx, gen = entry[1:] if reliable else entry
+                if gen != self._fgen.get((tier, nid, idx), 0):
+                    continue              # stale: drop it for good
+                # live entries only exist for allocatable nodes, so no
+                # health check is needed; _frac_set re-buckets the chip
+                # (gen bump), which also kills this entry's twin in the
+                # other-ordered bucket list
+                node = self.nodes[nid]
+                self._frac_set(node, tier, idx, f - quanta)
+                self._frac_alloc[job_id] = (tier, nid, idx, quanta)
+                self._node_jobs[nid].add(job_id)
+                chips = Fraction(quanta, per_chip)
+                return [(nid, int(chips) if chips.denominator == 1
+                         else chips)]
+        return None
+
+    def frac_allocation(self, job_id: str) -> Optional[FracAlloc]:
+        """The (tier, node, chip_idx, quanta) record of a fractional job."""
+        return self._frac_alloc.get(job_id)
+
     def release(self, job_id: str) -> None:
+        fr = self._frac_alloc.pop(job_id, None)
+        if fr is not None:
+            tier, nid, idx, q = fr
+            node = self.nodes[nid]
+            self._frac_set(node, tier, idx,
+                           node.tier_free_list(tier)[idx] + q)
+            self._node_jobs[nid].discard(job_id)
+            return
         for nid, k in self.allocations.pop(job_id, []):
             self._mutate(self.nodes[nid], lambda n, k=k: setattr(
                 n, "used", max(0, n.used - k)))
@@ -390,20 +721,22 @@ class Cluster:
     # -- topology ------------------------------------------------------------
 
     def job_pods(self, job_id: str) -> List[int]:
-        return sorted({self.nodes[nid].pod
-                       for nid, _ in self.allocations.get(job_id, [])})
+        return sorted({self.nodes[nid].pod for nid in self.job_nodes(job_id)})
 
     def crosses_pods(self, job_id: str) -> bool:
         return len(self.job_pods(job_id)) > 1
 
     def job_speed(self, job_id: str) -> float:
         """Synchronous training runs at the slowest participant's speed."""
-        alloc = self.allocations.get(job_id, [])
-        if not alloc:
+        nodes = self.job_nodes(job_id)
+        if not nodes:
             return 0.0
-        return min(self.nodes[nid].speed for nid, _ in alloc)
+        return min(self.nodes[nid].speed for nid in nodes)
 
     def job_nodes(self, job_id: str) -> List[str]:
+        fr = self._frac_alloc.get(job_id)
+        if fr is not None:
+            return [fr[1]]
         return [nid for nid, _ in self.allocations.get(job_id, [])]
 
     def jobs_on_node(self, node_id: str) -> List[str]:
@@ -430,7 +763,8 @@ class Cluster:
         # recovery can land after the node was recovered and re-allocated,
         # and wiping `used` would double-book those chips
         live = sum(k for jid in self._node_jobs[node_id]
-                   for nid, k in self.allocations[jid] if nid == node_id)
+                   for nid, k in self.allocations.get(jid, [])
+                   if nid == node_id)
 
         def fn(n):
             n.healthy = True

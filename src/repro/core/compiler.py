@@ -95,6 +95,9 @@ class TaskCompiler:
             "chips": spec.resources.chips,
             "min_chips": spec.resources.min_chips or spec.resources.chips,
             "prefer_single_pod": spec.resources.prefer_single_pod,
+            "isolation": spec.resources.isolation,
+            "quanta": spec.resources.quanta,
+            "spot": spec.resources.spot,
         }
         plan_id = hashlib.sha256(
             (spec.spec_hash() + json.dumps(staged, sort_keys=True)).encode()

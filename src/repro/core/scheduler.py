@@ -33,6 +33,20 @@ scheduling instant costs O(work done) instead of re-sorting all pending
 jobs.  Hook-fed and scan-based scheduling emit byte-identical actions (the
 parity property tests pin this); callers that never bind — e.g. the real
 TACC control loop — keep the original sorting paths.
+
+Isolation tiers + tenant plans: sub-chip (``mig`` / ``shared``) jobs bypass
+the exclusive-gang policy loops entirely and start through a common
+*fractional interactive lane* — FIFO by submit time into per-tier slot
+capacity — so a 1/7-chip notebook never waits behind a 64-chip training
+gang (the paper's small-interactive-job majority).  A
+:class:`TenantPlan` adds per-tenant knobs on top of quotas: per-tier max
+concurrency, a priority boost, and the tenant's spot price floor.  ``spot``
+jobs run on spare exclusive capacity: any blocked non-spot job may reclaim
+their chips (newest spot lease first), and their usage is priced by
+observed preemption risk — ``max(floor, 1 - preempts/starts)`` — so a
+tenant pays less for capacity that keeps getting taken back.  All of it is
+fed through the same incremental driver protocol; with no fractional/spot
+jobs and no plans every policy's actions are byte-identical to before.
 """
 from __future__ import annotations
 
@@ -43,7 +57,7 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Dict, Iterable, List, Optional, Tuple
 
-from repro.core.cluster import Cluster
+from repro.core.cluster import FRACTIONAL_TIERS, Cluster
 from repro.core.compiler import ExecutionPlan
 
 
@@ -93,6 +107,23 @@ class Job:
         return self.plan.mesh_request["chips"]
 
     @property
+    def isolation(self) -> str:
+        return self.plan.mesh_request.get("isolation", "exclusive")
+
+    @property
+    def fractional(self) -> bool:
+        return self.isolation != "exclusive"
+
+    @property
+    def quanta(self) -> int:
+        """The demand in integer tier quanta (== chips for exclusive)."""
+        return self.plan.mesh_request.get("quanta", self.requested)
+
+    @property
+    def spot(self) -> bool:
+        return bool(self.plan.mesh_request.get("spot", False))
+
+    @property
     def min_chips(self) -> int:
         return min(self.plan.mesh_request["min_chips"], self.requested)
 
@@ -121,7 +152,10 @@ class Job:
         entry = self.spec.entry
         w = float(entry.get("work_per_step", 1.0))
         alpha = float(entry.get("comm_frac", 0.05))
-        comm = w * alpha * (n - 1) / n * (2.0 if cross_pod else 1.0)
+        # no collective term on a single (or fractional) chip: (n-1)/n is 0
+        # at n == 1 and would go negative for sub-chip Fraction grants
+        comm = w * alpha * (n - 1) / n * (2.0 if cross_pod else 1.0) \
+            if n > 1 else 0.0
         return 1.0 / (w * (1 - alpha) / n + comm + 1e-12)
 
 
@@ -209,6 +243,21 @@ class OrderedJobView:
 # Policies
 # ---------------------------------------------------------------------------
 
+@dataclass(frozen=True)
+class TenantPlan:
+    """Per-tenant service plan on top of chip quotas.
+
+    ``max_per_tier`` caps *concurrently running jobs* per isolation tier
+    (e.g. at most 8 shared notebook slots for lab-a); ``priority_boost`` is
+    added to every job priority the tenant submits; ``spot_price_floor`` is
+    the lowest usage discount factor spot capacity can reach for this
+    tenant.  An absent plan (or absent tier key) means unlimited.
+    """
+    max_per_tier: Dict[str, int] = field(default_factory=dict)
+    priority_boost: int = 0
+    spot_price_floor: float = 0.25
+
+
 class Policy:
     name = "base"
 
@@ -217,20 +266,34 @@ class Policy:
     # most restart work to lose); short/narrow jobs keep the default packing
     RELIABLE_MIN_CHIPS = 16
     RELIABLE_MIN_EST_S = 600.0
+    # default spot price floor for tenants without a plan
+    SPOT_PRICE_FLOOR = 0.25
 
     def __init__(self, quotas: Optional[Dict[str, int]] = None,
                  tenant_weights: Optional[Dict[str, float]] = None,
-                 reliability_aware: bool = False):
+                 reliability_aware: bool = False,
+                 plans: Optional[Dict[str, TenantPlan]] = None):
         self.quotas = quotas or {}
         self.weights = tenant_weights or {}
         self.reliability_aware = reliability_aware
+        self.plans = plans or {}
         self.usage: Dict[str, float] = {}     # decayed chip-seconds / tenant
+        # spot pricing signal: leases handed out vs leases reclaimed, counted
+        # at action-emit time so every driver path sees the same history
+        self.spot_starts = 0
+        self.spot_preempts = 0
+        # running-job counts per (tenant, tier) — fed by the driver's
+        # job_started/job_stopped hooks; authoritative whenever incremental
+        # aggregates are bound (unbound callers scan ``running`` instead)
+        self._plan_counts: Dict[Tuple[str, str], int] = {}
         # incremental-driver state: None until a driver binds (legacy callers
         # that invoke schedule()/account() directly keep the scanning paths)
         self._tenant_chips: Optional[Dict[str, int]] = None
+        self._tenant_spot: Dict[str, int] = {}
         self._dirty = True                    # job/cluster state changed since
                                               # the last full rebalance
         self._queues: Optional[List[OrderedJobView]] = None
+        self._frac_view: Optional[OrderedJobView] = None
         self._admit_seq = itertools.count()   # shared across all views
 
     # -- incremental driver protocol -----------------------------------------
@@ -244,11 +307,16 @@ class Policy:
         if self._tenant_chips is None:
             self._tenant_chips = {}
 
-    def grant_delta(self, tenant: str, delta: int) -> None:
-        """Driver hook: ``delta`` chips were granted (+) / released (-)."""
+    def grant_delta(self, tenant: str, delta: int,
+                    spot: bool = False) -> None:
+        """Driver hook: ``delta`` chips were granted (+) / released (-);
+        ``spot`` marks spot-lease capacity (priced separately)."""
         if self._tenant_chips is not None and delta:
             self._tenant_chips[tenant] = \
                 self._tenant_chips.get(tenant, 0) + delta
+            if spot:
+                self._tenant_spot[tenant] = \
+                    self._tenant_spot.get(tenant, 0) + delta
 
     def note_change(self) -> None:
         """Driver hook: job/cluster state changed outside this policy's own
@@ -267,6 +335,9 @@ class Policy:
         """Opt in to driver-fed ordered queue views (idempotent)."""
         if self._queues is None:
             self._queues = self._make_queues()
+            # fractional (mig/shared) jobs route to one shared arrival view
+            # for the interactive lane instead of the policy's own queues
+            self._frac_view = OrderedJobView(lambda j: (j.submit_time,))
 
     def _make_queues(self) -> List[OrderedJobView]:
         """Build the policy's pending-membership views (subclass hook)."""
@@ -280,6 +351,9 @@ class Policy:
         if self._queues is None:
             return
         seq = next(self._admit_seq)
+        if job.fractional:
+            self._frac_view.add(job, seq)
+            return
         for v in self._views_for(job):
             v.add(job, seq)
 
@@ -287,14 +361,23 @@ class Policy:
         """Driver hook: ``job`` left the pending queue (started/terminal)."""
         if self._queues is None:
             return
+        if job.fractional:
+            self._frac_view.discard(job.id)
+            return
         for v in self._views_for(job):
             v.discard(job.id)
 
     def job_started(self, job: Job) -> None:
-        """Driver hook: ``job`` entered the running set (chips granted)."""
+        """Driver hook: ``job`` entered the running set (chips granted).
+        Subclass overrides must call super() — the base keeps the per-
+        (tenant, tier) running counts TenantPlan concurrency caps use."""
+        key = (job.tenant, job.isolation)
+        self._plan_counts[key] = self._plan_counts.get(key, 0) + 1
 
     def job_stopped(self, job: Job) -> None:
-        """Driver hook: ``job`` left the running set."""
+        """Driver hook: ``job`` left the running set (see job_started)."""
+        key = (job.tenant, job.isolation)
+        self._plan_counts[key] = self._plan_counts.get(key, 0) - 1
 
     def job_progressed(self, job: Job) -> None:
         """Driver hook: a running job's settled progress changed (its
@@ -310,7 +393,8 @@ class Policy:
     def _tenant_used(self, tenant: str, running: Iterable[Job]) -> int:
         if self._tenant_chips is not None:
             return self._tenant_chips.get(tenant, 0)
-        return sum(j.chips for j in running if j.tenant == tenant)
+        return sum(j.chips for j in running
+                   if j.tenant == tenant and not j.fractional)
 
     # bookkeeping called by the driver with the virtual time elapsed since
     # the last scheduling instant (dt is arbitrary, not a fixed tick)
@@ -321,12 +405,31 @@ class Policy:
         if self._tenant_chips is not None:
             for t, c in self._tenant_chips.items():
                 if c:
+                    sc = self._tenant_spot.get(t, 0)
+                    if sc:   # spot capacity accrues at the discounted price
+                        c = c - sc + sc * self.spot_price_factor(t)
                     self.usage[t] = self.usage.get(t, 0.0) + c * dt
         else:
             for j in running:
+                if j.fractional:
+                    continue     # sub-chip quanta are outside chip pricing
+                c = j.chips
+                if j.spot:
+                    c = c * self.spot_price_factor(j.tenant)
                 self.usage[j.tenant] = \
-                    self.usage.get(j.tenant, 0.0) + j.chips * dt
+                    self.usage.get(j.tenant, 0.0) + c * dt
         self.usage_decayed(dt)
+
+    def spot_price_factor(self, tenant: Optional[str] = None) -> float:
+        """Usage price of a spot chip relative to on-demand, in
+        [floor, 1]: 1 minus the observed preemption risk (reclaims per
+        lease), floored by the tenant's plan."""
+        plan = self.plans.get(tenant) if tenant is not None else None
+        floor = plan.spot_price_floor if plan is not None \
+            else self.SPOT_PRICE_FLOOR
+        if not self.spot_starts:
+            return 1.0
+        return max(floor, 1.0 - self.spot_preempts / self.spot_starts)
 
     def wakeup_interval(self) -> Optional[float]:
         """Seconds between periodic invocations the policy wants even when no
@@ -336,11 +439,24 @@ class Policy:
     def _mk_start(self, job: Job, chips: int) -> Start:
         """Start action; flags failure-aware placement for long, wide jobs
         when this policy is reliability-aware."""
+        if job.spot:
+            self.spot_starts += 1
         return Start(job.id, chips,
                      reliable=self.reliability_aware
                      and job.requested >= self.RELIABLE_MIN_CHIPS
                      and job.spec.estimated_duration_s
                      >= self.RELIABLE_MIN_EST_S)
+
+    def _emit_preempt(self, job: Job, reason: str = "priority") -> Preempt:
+        """Preempt action; records spot reclaims for the pricing signal."""
+        if job.spot:
+            self.spot_preempts += 1
+        return Preempt(job.id, reason)
+
+    def job_priority(self, job: Job) -> int:
+        """Submitted priority plus the tenant plan's boost."""
+        plan = self.plans.get(job.tenant)
+        return job.priority + (plan.priority_boost if plan is not None else 0)
 
     def _quota_ok(self, job: Job, running: Iterable[Job], chips: int,
                   started: Optional[Dict[str, int]] = None) -> bool:
@@ -359,8 +475,113 @@ class Policy:
             used += started.get(job.tenant, 0)
         return used + chips <= q
 
+    def _plan_ok(self, job: Job, running: Iterable[Job],
+                 stier: Optional[Dict[Tuple[str, str], int]] = None) -> bool:
+        """Would starting ``job`` keep its tenant inside the plan's per-tier
+        running-job cap?  ``stier`` accumulates (tenant, tier) starts granted
+        earlier in this same instant.  O(1) with driver-fed counts; unbound
+        callers scan ``running``."""
+        plan = self.plans.get(job.tenant)
+        if plan is None:
+            return True
+        cap = plan.max_per_tier.get(job.isolation)
+        if cap is None:
+            return True
+        if self._tenant_chips is not None:
+            used = self._plan_counts.get((job.tenant, job.isolation), 0)
+        else:
+            used = sum(1 for j in running if j.tenant == job.tenant
+                       and j.isolation == job.isolation)
+        if stier:
+            used += stier.get((job.tenant, job.isolation), 0)
+        return used < cap
+
+    def _note_started(self, job: Job, chips,
+                      started: Dict[str, int],
+                      stier: Optional[Dict[Tuple[str, str], int]] = None
+                      ) -> None:
+        """Record an intra-instant grant in the quota + plan accumulators."""
+        started[job.tenant] = started.get(job.tenant, 0) + chips
+        if self.plans and stier is not None:
+            k = (job.tenant, job.isolation)
+            stier[k] = stier.get(k, 0) + 1
+
+    @staticmethod
+    def _exclusive(pending: Iterable[Job]) -> Iterable[Job]:
+        """Whole-chip jobs only (the scan-based queue source; bound views
+        never contain fractional jobs in the first place)."""
+        return (j for j in pending if not j.fractional)
+
+    def _spot_victims(self, running: Iterable[Job],
+                      preempted: set) -> List[Job]:
+        """Running spot jobs available for reclaim, newest lease first (the
+        shortest-held lease loses; id breaks same-instant ties)."""
+        return sorted(
+            (j for j in running
+             if j.spot and not j.fractional and j.id not in preempted),
+            key=lambda j: (-(j.start_time if j.start_time is not None
+                             else 0.0), j.id))
+
+    def _spot_reclaim(self, job: Job, running: Iterable[Job], free: int,
+                      preempted: set) -> Optional[Tuple[List[Job], int]]:
+        """Pick spot victims so a blocked non-spot ``job`` fits.  Returns
+        (victims, chips_free_after_reclaim) or None if even reclaiming every
+        spot lease leaves the gang short.  No-op for spot jobs themselves —
+        spot never preempts spot."""
+        if job.spot or job.fractional:
+            return None
+        victims = self._spot_victims(running, preempted)
+        if not victims:
+            return None
+        gain = free
+        chosen: List[Job] = []
+        for v in victims:
+            chosen.append(v)
+            gain += v.chips
+            if gain >= job.requested:
+                return chosen, gain
+        return None
+
+    # -- scheduling ----------------------------------------------------------
+
     def schedule(self, now: float, pending: List[Job], running: List[Job],
                  cluster: Cluster) -> List[Action]:
+        """Exclusive-tier policy pass, then the shared fractional lane."""
+        actions = self._schedule_exclusive(now, pending, running, cluster)
+        self._frac_pass(pending, running, cluster, actions)
+        return actions
+
+    def _frac_pass(self, pending, running, cluster: Cluster,
+                   actions: List[Action]) -> None:
+        """Fractional interactive lane (all policies share it): mig/shared
+        sub-chip jobs start FIFO by submit time into per-tier slot capacity,
+        independent of the exclusive policy above, so small interactive jobs
+        never queue behind training gangs."""
+        if self._queues is not None:
+            if not len(self._frac_view):
+                return
+            queue = self._frac_view.jobs()
+        else:
+            frac = [j for j in pending if j.fractional]
+            if not frac:
+                return
+            queue = iter(sorted(frac, key=lambda j: j.submit_time))
+        free = {t: cluster.free_slots(t) for t in FRACTIONAL_TIERS}
+        stier: Dict[Tuple[str, str], int] = {}
+        for job in queue:
+            # tenant chip quotas govern the exclusive tier only; the
+            # fractional lane is capped by the plan's per-tier limits
+            if job.quanta <= free[job.isolation] and \
+                    self._plan_ok(job, running, stier):
+                actions.append(self._mk_start(job, job.requested))
+                if self.plans:
+                    k = (job.tenant, job.isolation)
+                    stier[k] = stier.get(k, 0) + 1
+                free[job.isolation] -= job.quanta
+
+    def _schedule_exclusive(self, now: float, pending: List[Job],
+                            running: List[Job], cluster: Cluster
+                            ) -> List[Action]:
         raise NotImplementedError
 
 
@@ -371,21 +592,35 @@ class FIFO(Policy):
         self._arrival = OrderedJobView(lambda j: (j.submit_time,))
         return [self._arrival]
 
-    def schedule(self, now, pending, running, cluster):
+    def _schedule_exclusive(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
         started: Dict[str, int] = {}          # tenant -> chips this instant
+        stier: Dict[Tuple[str, str], int] = {}
+        preempted: set = set()
         queue = self._arrival.jobs() if self._queues is not None \
-            else sorted(pending, key=lambda j: j.submit_time)
+            else sorted(self._exclusive(pending), key=lambda j: j.submit_time)
         for job in queue:
-            if job.requested <= free and \
-                    self._quota_ok(job, running, job.requested, started):
+            ok = self._quota_ok(job, running, job.requested, started) and \
+                self._plan_ok(job, running, stier)
+            if ok and job.requested <= free:
                 actions.append(self._mk_start(job, job.requested))
-                started[job.tenant] = \
-                    started.get(job.tenant, 0) + job.requested
+                self._note_started(job, job.requested, started, stier)
                 free -= job.requested
-            else:
-                break                      # strict FIFO: no overtaking
+                continue
+            if ok and job.requested > free:
+                # head blocked on capacity: reclaim spot leases if enough
+                rec = self._spot_reclaim(job, running, free, preempted)
+                if rec is not None:
+                    victims, gain = rec
+                    for v in victims:
+                        actions.append(self._emit_preempt(v, "spot-reclaim"))
+                        preempted.add(v.id)
+                    actions.append(self._mk_start(job, job.requested))
+                    self._note_started(job, job.requested, started, stier)
+                    free = gain - job.requested
+                    continue
+            break                          # strict FIFO: no overtaking
         return actions
 
 
@@ -401,10 +636,14 @@ class EASYBackfill(Policy):
         return [self._arrival]
 
     def job_started(self, job):
-        if self._queues is not None:
+        super().job_started(job)
+        # fractional jobs never block an exclusive head's reservation, so
+        # their (sub-chip) releases stay out of the index
+        if self._queues is not None and not job.fractional:
             self._release.add(job, next(self._admit_seq))
 
     def job_stopped(self, job):
+        super().job_stopped(job)
         if self._queues is not None:
             self._release.discard(job.id)
 
@@ -413,25 +652,41 @@ class EASYBackfill(Policy):
             self._release.discard(job.id)
             self._release.add(job, next(self._admit_seq))
 
-    def schedule(self, now, pending, running, cluster):
+    def _schedule_exclusive(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
         started: Dict[str, int] = {}
+        stier: Dict[Tuple[str, str], int] = {}
+        preempted: set = set()
         queue = self._arrival.jobs() if self._queues is not None \
-            else iter(sorted(pending, key=lambda j: j.submit_time))
+            else iter(sorted(self._exclusive(pending),
+                             key=lambda j: j.submit_time))
         head: Optional[Job] = None
         for job in queue:                  # start the queue head while it fits
             if job.requested <= free and \
-                    self._quota_ok(job, running, job.requested, started):
+                    self._quota_ok(job, running, job.requested, started) and \
+                    self._plan_ok(job, running, stier):
                 actions.append(self._mk_start(job, job.requested))
-                started[job.tenant] = \
-                    started.get(job.tenant, 0) + job.requested
+                self._note_started(job, job.requested, started, stier)
                 free -= job.requested
             else:
                 head = job
                 break
         if head is None:
             return actions
+        # capacity-blocked head: reclaim spot leases before reserving
+        if head.requested > free and \
+                self._quota_ok(head, running, head.requested, started) and \
+                self._plan_ok(head, running, stier):
+            rec = self._spot_reclaim(head, running, free, preempted)
+            if rec is not None:
+                victims, gain = rec
+                for v in victims:
+                    actions.append(self._emit_preempt(v, "spot-reclaim"))
+                    preempted.add(v.id)
+                actions.append(self._mk_start(head, head.requested))
+                self._note_started(head, head.requested, started, stier)
+                return actions     # next instant resumes reservation service
         # reservation: when will enough chips free up for the head job?
         if self._queues is not None:
             releases = ((now + key[0], job.chips)
@@ -439,7 +694,7 @@ class EASYBackfill(Policy):
         else:
             releases = iter(sorted(
                 (j.remaining_estimate(now), j.chips) for j in running
-                if j.chips > 0))
+                if j.chips > 0 and not j.fractional))
         avail = free
         reserve_at = float("inf")
         for t_rel, chips in releases:
@@ -457,10 +712,10 @@ class EASYBackfill(Policy):
             ends_before = now + job.spec.estimated_duration_s <= reserve_at
             spare = shadow_free - head.requested >= job.requested
             if fits and (ends_before or spare) and \
-                    self._quota_ok(job, running, job.requested, started):
+                    self._quota_ok(job, running, job.requested, started) and \
+                    self._plan_ok(job, running, stier):
                 actions.append(self._mk_start(job, job.requested))
-                started[job.tenant] = \
-                    started.get(job.tenant, 0) + job.requested
+                self._note_started(job, job.requested, started, stier)
                 shadow_free -= job.requested
         return actions
 
@@ -483,10 +738,11 @@ class FairShare(Policy):
         w = self.weights.get(tenant, 1.0)
         return self.usage.get(tenant, 0.0) / max(w, 1e-9)
 
-    def schedule(self, now, pending, running, cluster):
+    def _schedule_exclusive(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
         started: Dict[str, int] = {}
+        stier: Dict[Tuple[str, str], int] = {}
         if self._queues is not None:
             # k-way merge of the per-tenant arrival views, keyed by the
             # tenant's *current* share: identical order to the scan-based
@@ -498,16 +754,16 @@ class FairShare(Policy):
             queue = (job for _, job in heapq.merge(*streams))
         else:
             queue = iter(sorted(
-                pending,
+                self._exclusive(pending),
                 key=lambda j: (self._share(j.tenant), j.submit_time)))
         for job in queue:
             if free == 0:
                 break                      # nothing can start any more
             if job.requested <= free and \
-                    self._quota_ok(job, running, job.requested, started):
+                    self._quota_ok(job, running, job.requested, started) and \
+                    self._plan_ok(job, running, stier):
                 actions.append(self._mk_start(job, job.requested))
-                started[job.tenant] = \
-                    started.get(job.tenant, 0) + job.requested
+                self._note_started(job, job.requested, started, stier)
                 free -= job.requested
         return actions
 
@@ -516,47 +772,60 @@ class PriorityPreempt(Policy):
     name = "priority"
 
     def _make_queues(self):
-        self._prio = OrderedJobView(lambda j: (-j.priority, j.submit_time))
+        self._prio = OrderedJobView(
+            lambda j: (-self.job_priority(j), j.submit_time))
         return [self._prio]
 
-    def schedule(self, now, pending, running, cluster):
+    def _schedule_exclusive(self, now, pending, running, cluster):
         actions: List[Action] = []
         free = cluster.free_chips()
         preempted: set = set()
         started: Dict[str, int] = {}
+        stier: Dict[Tuple[str, str], int] = {}
         queue = self._prio.jobs() if self._queues is not None \
-            else iter(sorted(pending,
-                             key=lambda j: (-j.priority, j.submit_time)))
+            else iter(sorted(
+                self._exclusive(pending),
+                key=lambda j: (-self.job_priority(j), j.submit_time)))
         victims: Optional[List[Job]] = None   # sorted once, on first demand
+        has_spot = False
         floor: Optional[float] = None         # lowest preemptible priority
         for job in queue:
-            if not self._quota_ok(job, running, job.requested, started):
+            if not (self._quota_ok(job, running, job.requested, started)
+                    and self._plan_ok(job, running, stier)):
                 continue
             if job.requested <= free:
                 actions.append(self._mk_start(job, job.requested))
-                started[job.tenant] = \
-                    started.get(job.tenant, 0) + job.requested
+                self._note_started(job, job.requested, started, stier)
                 free -= job.requested
                 continue
-            # try checkpoint-then-preempt of strictly lower-priority jobs
+            if job.spot:
+                continue      # spot starts into free capacity only
+            # try checkpoint-then-preempt: spot leases rank below every
+            # priority, then strictly lower-priority preemptible jobs
             if floor is None:
-                floor = min((j.priority for j in running
-                             if j.spec.resources.preemptible),
+                floor = min((self.job_priority(j) for j in running
+                             if j.spec.resources.preemptible
+                             and not j.spot and not j.fractional),
                             default=float("inf"))
-            if job.priority <= floor:
+                has_spot = any(j.spot and not j.fractional for j in running)
+            prio = self.job_priority(job)
+            if prio <= floor and not has_spot:
                 if free == 0 and floor == float("inf"):
                     break                  # no fit and nothing preemptible
                 continue                   # no strictly-lower victims exist
             if victims is None:
                 victims = sorted(
-                    (j for j in running if j.spec.resources.preemptible),
-                    key=lambda j: (j.priority,
+                    (j for j in running if not j.fractional
+                     and (j.spec.resources.preemptible or j.spot)),
+                    key=lambda j: (0 if j.spot else 1, self.job_priority(j),
                                    -j.start_time if j.start_time is not None
                                    else 0.0))
             gain = free
             chosen = []
             for v in victims:
-                if v.priority >= job.priority or v.id in preempted:
+                if v.id in preempted:
+                    continue
+                if not v.spot and self.job_priority(v) >= prio:
                     continue
                 chosen.append(v)
                 gain += v.chips
@@ -564,11 +833,10 @@ class PriorityPreempt(Policy):
                     break
             if gain >= job.requested:
                 for v in chosen:
-                    actions.append(Preempt(v.id))
+                    actions.append(self._emit_preempt(v))
                     preempted.add(v.id)
                 actions.append(self._mk_start(job, job.requested))
-                started[job.tenant] = \
-                    started.get(job.tenant, 0) + job.requested
+                self._note_started(job, job.requested, started, stier)
                 free = gain - job.requested
         return actions
 
@@ -626,13 +894,17 @@ class GoodputElastic(Policy):
         if not pending or free <= 0:
             return actions
         granted: Dict[str, int] = {}          # tenant -> chips this round
+        stier: Dict[Tuple[str, str], int] = {}
         queue = self._arrival.jobs() if self._queues is not None \
-            else sorted(pending, key=lambda j: j.submit_time)
+            else sorted(self._exclusive(pending),
+                        key=lambda j: j.submit_time)
         for j in queue:
             if free <= 0:
                 break
             need = j.min_chips if j.elastic else j.requested
             if not 0 < need <= free:
+                continue
+            if not self._plan_ok(j, running, stier):
                 continue
             grant = min(free, j.requested) if j.elastic else j.requested
             q = self.quotas.get(j.tenant)
@@ -644,11 +916,11 @@ class GoodputElastic(Policy):
                 if grant < need or used + grant > q:
                     continue
             actions.append(self._mk_start(j, grant))
-            granted[j.tenant] = granted.get(j.tenant, 0) + grant
+            self._note_started(j, grant, granted, stier)
             free -= grant
         return actions
 
-    def schedule(self, now, pending, running, cluster):
+    def _schedule_exclusive(self, now, pending, running, cluster):
         if now - self._last < self.rebalance_every:
             return self._admit_only(pending, running, cluster)
         self._last = now
@@ -659,15 +931,19 @@ class GoodputElastic(Policy):
         if self._tenant_chips is not None and not self._dirty:
             return []
         self._dirty = False
+        # fractional jobs live outside the goodput budget: they consume
+        # mig/shared quanta, not the exclusive chips rebalanced here
         jobs = [j for j in itertools.chain(running, pending)
-                if j.state in (JobState.RUNNING, JobState.PENDING)]
+                if j.state in (JobState.RUNNING, JobState.PENDING)
+                and not j.fractional]
         if not jobs:
             return []
-        total = cluster.total_chips
+        total = cluster.exclusive_capacity()
         grant = {j.id: 0 for j in jobs}
-        # seed each job with min_chips in arrival order while they fit
+        # seed each job with min_chips in arrival order while they fit;
+        # spot jobs seed last — they only hold capacity nobody else wants
         budget = total
-        for j in sorted(jobs, key=lambda j: j.submit_time):
+        for j in sorted(jobs, key=lambda j: (j.spot, j.submit_time)):
             need = j.min_chips if j.elastic else j.requested
             if need <= budget:
                 grant[j.id] = need
@@ -688,15 +964,19 @@ class GoodputElastic(Policy):
                 d = self._marginal(j, grant[jid], cluster)
                 heapq.heappush(heap, (-d, j.submit_time, jid))
         actions: List[Action] = []
+        stier: Dict[Tuple[str, str], int] = {}
         for j in running:
             g = grant.get(j.id, j.chips)
             if g == 0:
-                actions.append(Preempt(j.id, reason="goodput-rebalance"))
+                actions.append(self._emit_preempt(j, "goodput-rebalance"))
             elif g != j.chips:
                 actions.append(Resize(j.id, g))
         for j in pending:
-            if grant.get(j.id, 0) > 0:
+            if grant.get(j.id, 0) > 0 and self._plan_ok(j, running, stier):
                 actions.append(self._mk_start(j, grant[j.id]))
+                if self.plans:
+                    k = (j.tenant, j.isolation)
+                    stier[k] = stier.get(k, 0) + 1
         return actions
 
 

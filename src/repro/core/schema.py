@@ -6,6 +6,14 @@ Every task submitted to the cluster is a self-contained, unified
 configuration. The canonical JSON serialization is hashed, which gives the
 paper's reproducibility guarantee: the same spec hash executes identically on
 any TACC instance (deterministic data stream + seeded init + recorded plan).
+
+Isolation tiers: ``chips`` may be fractional for the sub-chip tiers — a
+``mig`` partition at 1/``MIG_SLICES`` granularity or a ``shared``
+(time-sliced) slot at 1/``SHARED_SLOTS`` — carried as an exact
+:class:`fractions.Fraction` (serialized ``"p/q"``), never a float, so all
+capacity bookkeeping downstream stays integer-quantized.  ``spot`` marks a
+job preemptible-for-capacity: it runs on spare chips and any non-spot demand
+may reclaim them (priced by preemption risk in the scheduling layer).
 """
 from __future__ import annotations
 
@@ -13,20 +21,58 @@ import dataclasses
 import hashlib
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from fractions import Fraction
+from typing import Any, Dict, Optional, Union
 
 QOS_CLASSES = ("realtime", "batch", "besteffort")
 BACKENDS = ("jax_train", "jax_serve", "shell")
+
+# isolation tiers and their sub-chip quantization (quanta per chip).  The
+# cluster's multi-resource allocator and the trace layer import these so the
+# whole stack agrees on one exact granularity per tier.
+ISOLATION_TIERS = ("exclusive", "mig", "shared")
+MIG_SLICES = 7          # MIG-style partitions per chip (1/7-chip granularity)
+SHARED_SLOTS = 4        # time-sliced slots per shared chip (oversubscription)
+
+TIER_QUANTA = {"exclusive": 1, "mig": MIG_SLICES, "shared": SHARED_SLOTS}
 
 
 class SpecError(ValueError):
     pass
 
 
+def parse_chips(value: Union[int, str, Fraction]) -> Union[int, Fraction]:
+    """Normalize a chips demand to an exact int or Fraction (never float).
+
+    Accepts ints, :class:`Fraction` and ``"p/q"`` / ``"n"`` strings (the JSON
+    carrier).  Integral fractions collapse to int so whole-chip demands
+    compare and serialize exactly as before.
+    """
+    if isinstance(value, bool):
+        raise SpecError(f"chips must be a number, got {value!r}")
+    if isinstance(value, float):
+        raise SpecError("fractional chips must be exact (Fraction or 'p/q' "
+                        f"string), not float {value!r}")
+    if isinstance(value, str):
+        value = Fraction(value)
+    if isinstance(value, Fraction) and value.denominator == 1:
+        return int(value)
+    if not isinstance(value, (int, Fraction)):
+        raise SpecError(f"chips must be int/Fraction/'p/q', got {value!r}")
+    return value
+
+
+def chips_repr(value: Union[int, Fraction]) -> Union[int, str]:
+    """JSON-stable carrier: int stays int, a Fraction becomes ``"p/q"``."""
+    if isinstance(value, Fraction):
+        return f"{value.numerator}/{value.denominator}"
+    return value
+
+
 @dataclass(frozen=True)
 class ResourceSpec:
     """Computing / network resource and QoS requirements."""
-    chips: int = 1
+    chips: Union[int, Fraction, str] = 1
     min_chips: int = 0              # >0 => elastic: may run shrunk
     prefer_single_pod: bool = True  # gang placement hint (ICI locality)
     hbm_gb_per_chip: float = 16.0
@@ -34,10 +80,40 @@ class ResourceSpec:
     priority: int = 0               # higher preempts lower (if preemptible)
     preemptible: bool = True
     max_runtime_s: float = 86400.0
+    isolation: str = "exclusive"    # exclusive | mig | shared
+    spot: bool = False              # preemptible-for-capacity spare tier
+
+    def __post_init__(self):
+        object.__setattr__(self, "chips", parse_chips(self.chips))
+
+    @property
+    def quanta(self) -> int:
+        """The demand in the tier's exact integer quanta: whole chips for
+        exclusive, 1/MIG_SLICES slices for mig, 1/SHARED_SLOTS slots for
+        shared."""
+        q = self.chips * TIER_QUANTA.get(self.isolation, 1)
+        if isinstance(q, Fraction):
+            if q.denominator != 1:
+                raise SpecError(
+                    f"chips {self.chips} is not quantized for tier "
+                    f"{self.isolation!r} (granularity "
+                    f"1/{TIER_QUANTA[self.isolation]})")
+            return int(q)
+        return int(q)
 
     def validate(self) -> None:
-        if self.chips < 1:
-            raise SpecError("chips must be >= 1")
+        if self.isolation not in ISOLATION_TIERS:
+            raise SpecError(f"isolation must be one of {ISOLATION_TIERS}")
+        if self.isolation == "exclusive":
+            if not isinstance(self.chips, int) or self.chips < 1:
+                raise SpecError("exclusive jobs need integer chips >= 1")
+        else:
+            if not 0 < self.chips <= 1:
+                raise SpecError(f"{self.isolation} jobs take a sub-chip "
+                                "demand in (0, 1]")
+            if self.min_chips:
+                raise SpecError(f"{self.isolation} jobs are not elastic")
+            self.quanta                      # raises if not quantized
         if self.min_chips > self.chips:
             raise SpecError("min_chips > chips")
         if self.qos not in QOS_CLASSES:
@@ -88,7 +164,11 @@ class TaskSpec:
     # -- canonical serialization / reproducibility hash ---------------------
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # Fractions travel as exact "p/q" strings (JSON has no rationals and
+        # floats would break the exact-bookkeeping guarantee)
+        d["resources"]["chips"] = chips_repr(self.resources.chips)
+        return d
 
     def canonical_json(self) -> str:
         return json.dumps(self.to_dict(), sort_keys=True,

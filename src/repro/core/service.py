@@ -90,9 +90,15 @@ class TACC:
             job = self.jobs[a.job_id]
             if isinstance(a, Start) and job.state == JobState.PENDING:
                 job.place_reliable = a.reliable
-                alloc = self.cluster.try_allocate(
-                    job.id, a.chips, job.spec.resources.prefer_single_pod,
-                    a.reliable)
+                if job.fractional:
+                    # mirror the sim: sub-chip tiers go through the
+                    # multi-resource allocator, one chip max
+                    alloc = self.cluster.try_allocate_fractional(
+                        job.id, job.isolation, job.quanta, a.reliable)
+                else:
+                    alloc = self.cluster.try_allocate(
+                        job.id, a.chips,
+                        job.spec.resources.prefer_single_pod, a.reliable)
                 if alloc is not None:
                     job.state = JobState.RUNNING
                     job.chips = a.chips
@@ -106,7 +112,8 @@ class TACC:
                 job.preemptions += 1
                 job.state = JobState.PENDING
                 job.chips = 0
-            elif isinstance(a, Resize) and job.state == JobState.RUNNING:
+            elif isinstance(a, Resize) and job.state == JobState.RUNNING \
+                    and not job.fractional:
                 self.executor.checkpoint(job.id)
                 self.cluster.release(job.id)
                 if self.cluster.try_allocate(
@@ -121,7 +128,9 @@ class TACC:
         self.policy.account(1.0, self._running())
         # release cluster state for jobs the executor finished/failed/requeued
         for jid, job in self.jobs.items():
-            if job.state != JobState.RUNNING and jid in self.cluster.allocations:
+            if job.state != JobState.RUNNING and (
+                    jid in self.cluster.allocations
+                    or self.cluster.frac_allocation(jid) is not None):
                 self.cluster.release(jid)
                 job.chips = 0
         return metrics

@@ -124,6 +124,15 @@ class ClusterSim:
         self._failures_idle = 0               # ... that hit zero running jobs
         self._repair_s = 0.0                  # summed incident repair time
         self._repair_until: Dict[str, float] = {}    # node -> repair end
+        # isolation-tier accounting: spot reclaims plus time-weighted
+        # shared-slot occupancy and fractional-chip fragmentation.  The
+        # integrals accrue whenever the clock advances, BEFORE any state
+        # mutation at the new instant — occupancy is piecewise-constant
+        # between mutations, so this is exact (all zero untiered).
+        self._spot_preempts = 0
+        self._tier_t = 0.0                    # metrics clock
+        self._occ_shared_s = 0.0              # integral of shared_occupancy
+        self._frag_chip_s = 0.0               # integral of frag_chips
 
     # -- workload ------------------------------------------------------------
     # submit/inject only append: sorting a 50k-job month trace once per
@@ -167,8 +176,14 @@ class ClusterSim:
 
     def _start(self, job: Job, chips: int, reliable: bool = False) -> None:
         job.place_reliable = reliable
-        alloc = self.cluster.try_allocate(
-            job.id, chips, job.spec.resources.prefer_single_pod, reliable)
+        if job.fractional:
+            # sub-chip tiers route through the multi-resource allocator:
+            # best-fit onto a single mig/shared chip's free quanta
+            alloc = self.cluster.try_allocate_fractional(
+                job.id, job.isolation, job.quanta, reliable)
+        else:
+            alloc = self.cluster.try_allocate(
+                job.id, chips, job.spec.resources.prefer_single_pod, reliable)
         if alloc is None:
             # grant couldn't be applied: flag the divergence so a cadence
             # policy retries instead of skipping the next rebalance
@@ -178,7 +193,10 @@ class ClusterSim:
         job.chips = chips
         self._pending_jobs.pop(job.id, None)
         self._running_jobs[job.id] = job
-        self.policy.grant_delta(job.tenant, chips)
+        if not job.fractional:
+            # fractional grants are mig/shared quanta, outside the
+            # exclusive-chip tenant aggregate (quotas/usage pricing)
+            self.policy.grant_delta(job.tenant, chips, spot=job.spot)
         self.policy.job_removed(job)
         self.policy.job_started(job)
         job.start_time = self.now
@@ -206,7 +224,8 @@ class ClusterSim:
         else:
             job.progress = job.ckpt_progress           # lose uncheckpointed work
         self.cluster.release(job.id)
-        self.policy.grant_delta(job.tenant, -job.chips)
+        if not job.fractional:
+            self.policy.grant_delta(job.tenant, -job.chips, spot=job.spot)
         self.policy.note_change()
         self._running_jobs.pop(job.id, None)
         self.policy.job_stopped(job)
@@ -227,10 +246,14 @@ class ClusterSim:
                 job = self.jobs[a.job_id]
                 if job.state == JobState.RUNNING:
                     job.preemptions += 1
+                    if job.spot:
+                        self._spot_preempts += 1
                     self._stop(job, JobState.PENDING, checkpoint=True,
                                reason=f"preempt({a.reason})")
             elif isinstance(a, Resize):
                 job = self.jobs[a.job_id]
+                if job.fractional:
+                    continue    # sub-chip grants are fixed-size
                 if job.state == JobState.RUNNING and a.chips != job.chips:
                     # checkpoint-resize-resume
                     if self._event_mode:
@@ -359,6 +382,7 @@ class ClusterSim:
     def step(self) -> None:
         """One fixed tick of the legacy engine (parity oracle)."""
         dt = self.cfg.tick
+        self._accrue_tier_metrics()   # before this tick's mutations land
         self._sort_workload()
         # arrivals
         while self._arrivals and self._arrivals[0][0] <= self.now:
@@ -492,6 +516,19 @@ class ClusterSim:
             return True
         raise ValueError(kind)
 
+    def _accrue_tier_metrics(self) -> None:
+        """Advance the tier-metrics clock to ``self.now``, accruing the
+        elapsed interval at the *current* (pre-mutation) occupancy.  Call
+        sites sit right after the clock moves and before event handlers /
+        tick bookkeeping touch cluster state, so the piecewise-constant
+        integral is exact in the event engine."""
+        dt = self.now - self._tier_t
+        self._tier_t = self.now
+        if dt > 0 and self.cluster.tier_capacity("shared") \
+                + self.cluster.tier_capacity("mig"):
+            self._occ_shared_s += dt * self.cluster.shared_occupancy()
+            self._frag_chip_s += dt * self.cluster.frag_chips()
+
     def _schedule_now(self) -> None:
         if self.cfg.straggler_mitigation:
             self._straggler_sweep()
@@ -534,6 +571,7 @@ class ClusterSim:
                 self.now = until
                 break
             self.now = t
+            self._accrue_tier_metrics()   # before this instant's handlers
             need_sched = False
             while self._heap and self._heap[0][0] <= t:
                 _, _, kind, payload = heapq.heappop(self._heap)
@@ -564,6 +602,7 @@ class ClusterSim:
     # -- metrics ---------------------------------------------------------------
 
     def metrics(self) -> Dict[str, float]:
+        self._accrue_tier_metrics()       # flush the tail interval
         done = [j for j in self.jobs.values() if j.state == JobState.COMPLETED]
         waits = [(j.first_start - j.submit_time) for j in done
                  if j.first_start is not None]
@@ -592,6 +631,9 @@ class ClusterSim:
             rel[f"admission_rate_{t}"] = admitted.get(t, 0) / submitted[t]
         return {
             **rel,
+            "spot_preemptions": float(self._spot_preempts),
+            "shared_occupancy": self._occ_shared_s / max(self.now, 1e-9),
+            "frag_chips": self._frag_chip_s / max(self.now, 1e-9),
             "completed": len(done),
             "jobs": len(self.jobs),
             "makespan": makespan,

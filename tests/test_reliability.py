@@ -124,7 +124,7 @@ def test_format1_trace_still_loads():
     tr = Trace.from_dict(d)
     assert tr.incidents == [] and tr.node_ages == {}
     with pytest.raises(ValueError):
-        Trace.from_dict({"format": 3, "jobs": [], "events": []})
+        Trace.from_dict({"format": 4, "jobs": [], "events": []})
 
 
 def test_month_rel_preset_shape():

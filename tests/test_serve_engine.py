@@ -52,3 +52,26 @@ def test_long_workload_never_exceeds_max_seq(model):
     assert len(res) == 6 and all(r.done for r in res)
     assert all(len(r.tokens) == 8 for r in res)
     assert int(np.max(np.asarray(eng.cache["lengths"]))) <= 24
+
+
+def test_bench_serving_smoke_keeps_slot_invariants(model):
+    """One short ``bench_serving`` pass stays true to the slot lifecycle:
+    every request finishes with exactly max_new tokens, freed slots end
+    reset to length 0, and nothing walks past max_seq.  Pins the bench
+    driver itself against serve-engine API drift."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "benchmarks"))
+    from bench_serving import run_bench
+    cfg, params = model
+    out = run_bench(n_requests=3, max_new=2, max_seq=24,
+                    cfg=cfg, params=params)
+    for eng, res, _wall in out.values():
+        assert len(res) == 3 and all(r.done for r in res)
+        assert all(len(r.tokens) == 2 for r in res)
+        assert all(s.request is None for s in eng._slots)
+        assert int(np.max(np.asarray(eng.cache["lengths"]))) == 0
+        assert eng._steps > 0
+    # batching must not serve in more decode steps than sequential
+    assert out["batched"][0]._steps <= out["sequential"][0]._steps

@@ -1,0 +1,431 @@
+"""Isolation tiers end to end: the multi-resource allocator (exclusive /
+MIG / shared chip pools) against a brute-force placement reference, spot
+reclaim + risk pricing, tenant plans (per-tier concurrency caps, priority
+boost), tick/event engine parity on a mixed trace, and trace format-3
+back-compat (format-1/2 artifacts load with tier defaults and gzip
+serialization stays byte-stable)."""
+import dataclasses
+import gzip
+import json
+import os
+import random
+
+import pytest
+
+from repro.core import (Cluster, ClusterSim, Job, JobState, Preempt,
+                        ResourceSpec, RuntimeEnv, SimConfig, Start, TaskSpec,
+                        TenantPlan, TierConfig, make_policy)
+from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.core.schema import SpecError, parse_chips
+from repro.data.trace import (Trace, TraceConfig, horizon, scale_preset,
+                              synthesize)
+
+TRACE_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "benchmarks", "traces")
+
+
+def tiered_cluster(n_pods=2, hosts_per_pod=3, chips_per_host=4,
+                   mig=1, shared=1):
+    return Cluster(n_pods=n_pods, hosts_per_pod=hosts_per_pod,
+                   chips_per_host=chips_per_host,
+                   tiers=TierConfig(mig_chips_per_host=mig,
+                                    shared_chips_per_host=shared))
+
+
+def mkcompiler(root):
+    return TaskCompiler(ArtifactStore(str(root / "cas")), str(root / "work"))
+
+
+def mkjob(compiler, name, chips, steps=100, *, tenant="t", priority=0,
+          min_chips=0, submit=0.0, preemptible=True, isolation="exclusive",
+          spot=False):
+    spec = TaskSpec(
+        name=name, tenant=tenant,
+        resources=ResourceSpec(chips=chips, min_chips=min_chips,
+                               priority=priority, preemptible=preemptible,
+                               isolation=isolation, spot=spot),
+        runtime=RuntimeEnv(backend="shell"),
+        entry={"work_per_step": float(parse_chips(chips)) * 0.9,
+               "comm_frac": 0.0},
+        total_steps=steps, estimated_duration_s=steps)
+    return Job(id=name, plan=compiler.compile(spec), submit_time=submit)
+
+
+# -- schema -------------------------------------------------------------------
+
+def test_fractional_chips_schema():
+    r = ResourceSpec(chips="3/7", isolation="mig")
+    r.validate()
+    assert r.quanta == 3
+    assert ResourceSpec(chips="2/4", isolation="shared").quanta == 2
+    with pytest.raises(SpecError):
+        ResourceSpec(chips=0.5)                      # floats are inexact
+    with pytest.raises(SpecError):
+        ResourceSpec(chips="1/3", isolation="mig").validate()   # not 1/7ths
+    with pytest.raises(SpecError):
+        ResourceSpec(chips="3/7", isolation="exclusive").validate()
+    with pytest.raises(SpecError):
+        ResourceSpec(chips="2/7", isolation="mig", min_chips=1).validate()
+
+
+# -- allocator ----------------------------------------------------------------
+
+def test_fractional_best_fit_prefers_fullest_fitting_chip():
+    c = tiered_cluster()
+    # carve 2/7 out of the first mig chip; a later 5/7 demand must land on
+    # that same (now exactly-fitting) chip, not open a fresh one
+    assert c.try_allocate_fractional("a", "mig", 2) is not None
+    alloc = c.try_allocate_fractional("b", "mig", 5)
+    assert alloc is not None
+    assert c.frac_allocation("b")[:3] == c.frac_allocation("a")[:3]
+    assert c.frag_chips() == 0                       # perfectly packed
+    c.release("a")
+    c.release("b")
+    assert c.free_slots("mig") == c.tier_capacity("mig")
+    c.check_counters()
+
+
+def test_fractional_exhaustion_and_release():
+    c = tiered_cluster(n_pods=1, hosts_per_pod=1)    # one shared chip: 4 slots
+    ids = []
+    for i in range(4):
+        assert c.try_allocate_fractional(f"s{i}", "shared", 1) is not None
+        ids.append(f"s{i}")
+    assert c.try_allocate_fractional("overflow", "shared", 1) is None
+    assert c.shared_occupancy() == 1.0
+    c.release(ids[1])
+    assert c.try_allocate_fractional("again", "shared", 1) is not None
+    c.check_counters()
+
+
+def test_fractional_allocations_survive_node_failure_accounting():
+    c = tiered_cluster(n_pods=1, hosts_per_pod=2)
+    assert c.try_allocate_fractional("m", "mig", 3) is not None
+    nid = c.frac_allocation("m")[1]
+    c.fail_node(nid)
+    assert c.free_slots("mig") == 7                  # only the healthy host
+    assert c.tier_occupancy("mig") == pytest.approx(3 / 14)
+    c.check_counters()
+    c.recover_node(nid)
+    assert c.free_slots("mig") == 14 - 3
+    c.release("m")
+    assert c.free_slots("mig") == 14
+    c.check_counters()
+
+
+def brute_force_pick(c, tier, quanta, reliable):
+    """Reference order: min (free, [hazard,] node, chip) over fitting chips."""
+    best = None
+    for nid, node in c.nodes.items():
+        if not node.avail:
+            continue
+        for idx, free in enumerate(node.tier_free_list(tier)):
+            if free >= quanta:
+                key = (free, c.node_hazard_key(nid), nid, idx) if reliable \
+                    else (free, nid, idx)
+                if best is None or key < best:
+                    best = key
+    return best and (best[-2], best[-1])
+
+
+def test_fractional_placement_matches_brute_force_fuzz():
+    rng = random.Random(20)
+    c = tiered_cluster(n_pods=2, hosts_per_pod=4, mig=1, shared=2)
+    live = {}
+    nodes = list(c.nodes)
+    for step in range(1500):
+        op = rng.random()
+        if op < 0.45:
+            tier = rng.choice(("mig", "shared"))
+            q = rng.randint(1, c.tiers.quanta_per_chip(tier))
+            reliable = rng.random() < 0.3
+            want = brute_force_pick(c, tier, q, reliable)
+            got = c.try_allocate_fractional(f"f{step}", tier, q, reliable)
+            if want is None:
+                assert got is None
+            else:
+                assert got is not None
+                fr = c.frac_allocation(f"f{step}")
+                assert (fr[1], fr[2]) == want, (step, tier, q, reliable)
+                live[f"f{step}"] = fr
+        elif op < 0.7 and live:
+            jid = rng.choice(sorted(live))
+            del live[jid]
+            c.release(jid)
+        elif op < 0.8:
+            nid = rng.choice(nodes)
+            if c.nodes[nid].healthy:
+                c.fail_node(nid)
+            else:
+                c.recover_node(nid)
+        elif op < 0.9:
+            c.set_node_age(rng.choice(nodes), rng.uniform(0, 2000))
+        elif c.free_chips() >= 2:
+            c.try_allocate(f"x{step}", 2)            # exclusive traffic too
+        if step % 250 == 0:
+            c.check_counters()
+    c.check_counters()
+
+
+def test_untiered_cluster_has_no_fractional_capacity():
+    c = Cluster(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    assert c.tier_capacity("mig") == 0
+    assert c.free_slots("shared") == 0
+    assert c.try_allocate_fractional("j", "mig", 1) is None
+    assert c.exclusive_capacity() == 8
+    c.check_counters()
+
+
+# -- scheduler: fractional lane, spot, plans ----------------------------------
+
+def test_fifo_fractional_lane_starts_subchip_jobs(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = tiered_cluster()
+    pol = make_policy("fifo")
+    nb = mkjob(comp, "nb", "2/4", isolation="shared")
+    batch = mkjob(comp, "batch", 4)
+    acts = pol.schedule(0.0, [batch, nb], [], c)
+    started = {a.job_id for a in acts if isinstance(a, Start)}
+    assert started == {"batch", "nb"}
+
+
+def test_spot_reclaim_and_risk_pricing(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=1, hosts_per_pod=2, chips_per_host=4)   # 8 chips
+    pol = make_policy("fifo")
+    spot = mkjob(comp, "spot", 8, tenant="s", spot=True)
+    acts = pol.schedule(0.0, [spot], [], c)
+    assert [a.job_id for a in acts if isinstance(a, Start)] == ["spot"]
+    assert c.try_allocate("spot", 8) is not None
+    spot.state, spot.chips, spot.start_time = JobState.RUNNING, 8, 0.0
+    # an on-demand arrival blocked on capacity reclaims the spot lease
+    od = mkjob(comp, "od", 8, submit=10.0)
+    acts = pol.schedule(10.0, [od], [spot], c)
+    kinds = {type(a).__name__: a for a in acts}
+    assert isinstance(kinds.get("Preempt"), Preempt)
+    assert kinds["Preempt"].job_id == "spot"
+    assert kinds["Preempt"].reason == "spot-reclaim"
+    assert any(isinstance(a, Start) and a.job_id == "od" for a in acts)
+    # pricing: 1 start, 1 preemption -> factor at the floor
+    assert pol.spot_starts == 1 and pol.spot_preempts == 1
+    assert pol.spot_price_factor("s") == pol.SPOT_PRICE_FLOOR
+    # usage accrues at the discounted rate for the spot tenant
+    spot.state, spot.chips = JobState.RUNNING, 8
+    pol.account(10.0, [spot])
+    assert pol.usage["s"] == pytest.approx(
+        10.0 * 8 * pol.SPOT_PRICE_FLOOR)
+
+
+def test_spot_never_preempts_on_demand(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    pol = make_policy("priority")
+    od = mkjob(comp, "od", 8)
+    assert c.try_allocate("od", 8) is not None
+    od.state, od.chips, od.start_time = JobState.RUNNING, 8, 0.0
+    spot = mkjob(comp, "spot", 8, spot=True, priority=10, submit=5.0)
+    acts = pol.schedule(5.0, [spot], [od], c)
+    assert not any(isinstance(a, Preempt) for a in acts)   # waits for free
+
+
+def test_priority_prefers_spot_victims(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    pol = make_policy("priority")
+    onprem = mkjob(comp, "od", 4, priority=0)
+    spot = mkjob(comp, "sp", 4, priority=3, spot=True)
+    for j in (onprem, spot):
+        assert c.try_allocate(j.id, 4) is not None
+        j.state, j.chips, j.start_time = JobState.RUNNING, 4, 0.0
+    urgent = mkjob(comp, "urgent", 4, priority=10, submit=1.0)
+    acts = pol.schedule(1.0, [urgent], [onprem, spot], c)
+    victims = [a.job_id for a in acts if isinstance(a, Preempt)]
+    assert victims == ["sp"]       # spot ranks below every on-demand victim
+
+
+def test_tenant_plan_caps_per_tier_concurrency(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = tiered_cluster()
+    pol = make_policy("fifo",
+                      plans={"cap": TenantPlan(max_per_tier={"shared": 2})})
+    jobs = [mkjob(comp, f"s{i}", "1/4", tenant="cap", isolation="shared")
+            for i in range(4)]
+    acts = pol.schedule(0.0, jobs, [], c)
+    assert len([a for a in acts if isinstance(a, Start)]) == 2
+    # capacity is plentiful; the plan is what bit
+    assert c.free_slots("shared") == c.tier_capacity("shared")
+
+
+def test_tenant_plan_priority_boost(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    pol = make_policy("priority",
+                      plans={"vip": TenantPlan(priority_boost=10)})
+    lo = mkjob(comp, "lo", 8, priority=0)
+    assert c.try_allocate("lo", 8) is not None
+    lo.state, lo.chips, lo.start_time = JobState.RUNNING, 8, 0.0
+    vip = mkjob(comp, "vip", 8, tenant="vip", priority=0, submit=1.0)
+    acts = pol.schedule(1.0, [vip], [lo], c)
+    assert any(isinstance(a, Preempt) and a.job_id == "lo" for a in acts)
+    assert any(isinstance(a, Start) and a.job_id == "vip" for a in acts)
+
+
+# -- sim end to end -----------------------------------------------------------
+
+def mixed_trace_cfg(seed=0):
+    return TraceConfig(n_jobs=24, seed=seed, mean_gap_s=25.0,
+                       widths=(2, 2, 4, 4), steps_min=40, steps_max=160,
+                       elastic_frac=0.0, priority_frac=0.2,
+                       interactive_frac=0.4, interactive_steps=(20, 80),
+                       spot_frac=0.3, mig_chips_per_host=1,
+                       shared_chips_per_host=1,
+                       n_failures=1, n_stragglers=1, ops_start=100.0,
+                       ops_window=400.0, recover_s=(100.0, 200.0),
+                       slow_duration_s=(100.0, 200.0))
+
+
+@pytest.mark.parametrize("policy", ["fifo", "priority"])
+def test_mixed_trace_engine_parity(tmp_path, policy):
+    """Tick and event engines agree on a trace mixing exclusive, MIG,
+    shared and spot jobs (the tiered analogue of the PR 3 parity pin)."""
+    metrics = {}
+    for engine in ("tick", "event"):
+        comp = mkcompiler(tmp_path / engine)
+        c = tiered_cluster(n_pods=2, hosts_per_pod=4)
+        sim = ClusterSim(c, make_policy(policy), SimConfig(
+            tick=1.0, checkpoint_interval_s=20, checkpoint_cost_s=2,
+            restart_cost_s=10, engine=engine))
+        synthesize(mixed_trace_cfg(), list(c.nodes)).install(sim, comp)
+        metrics[engine] = sim.run()
+        c.check_counters()
+    mt, me = metrics["tick"], metrics["event"]
+    assert me["completed"] == mt["completed"]
+    assert me["preemptions"] == mt["preemptions"]
+    assert me["spot_preemptions"] == mt["spot_preemptions"]
+    assert me["avg_jct"] == pytest.approx(mt["avg_jct"], rel=0.1)
+    assert me["shared_occupancy"] == pytest.approx(
+        mt["shared_occupancy"], rel=0.2, abs=0.01)
+
+
+def test_mixed_trace_event_run_completes_all_tiers(tmp_path):
+    comp = mkcompiler(tmp_path)
+    c = tiered_cluster(n_pods=2, hosts_per_pod=4)
+    sim = ClusterSim(c, make_policy("backfill"), SimConfig(engine="event"))
+    tr = synthesize(mixed_trace_cfg(seed=5), list(c.nodes))
+    assert any(j.isolation != "exclusive" for j in tr.jobs)
+    assert any(j.spot for j in tr.jobs)
+    tr.install(sim, comp)
+    m = sim.run(until=horizon(tr))
+    assert m["completed"] == len(tr.jobs)
+    assert m["shared_occupancy"] > 0.0
+    c.check_counters()
+
+
+def test_fractional_grants_stay_out_of_exclusive_quota_accounting(tmp_path):
+    """Regression: a fractional start must not leak its Fraction chips into
+    the exclusive-chip tenant aggregate.  Goodput's between-rebalance quota
+    shrink (``min(grant, q - used)``) would otherwise emit a Fraction grant
+    for a whole-chip elastic job, and the allocator's bucketed free lists
+    index on ``node.free`` — a Fraction there is a TypeError (seen at
+    month-50k-mixed scale)."""
+    comp = mkcompiler(tmp_path)
+    c = tiered_cluster(n_pods=2, hosts_per_pod=4)
+    cfg = dataclasses.replace(mixed_trace_cfg(seed=3), elastic_frac=0.6)
+    tr = synthesize(cfg, list(c.nodes))
+    assert any(j.isolation != "exclusive" for j in tr.jobs)
+    quotas = {t: 6 for t in {j.tenant for j in tr.jobs}}
+    sim = ClusterSim(c, make_policy("goodput", quotas=quotas),
+                     SimConfig(engine="event", restart_cost_s=5))
+    tr.install(sim, comp)
+    m = sim.run(until=horizon(tr))
+    c.check_counters()
+    pol = sim.policy
+    # the driver-fed aggregate holds whole exclusive chips only
+    assert all(isinstance(v, int) for v in pol._tenant_chips.values())
+    assert all(isinstance(u, float) for u in pol.usage.values())
+    assert m["completed"] > 0
+
+
+def test_untiered_metrics_stay_exactly_zero(tmp_path):
+    """Tier metrics on a legacy all-exclusive run are exactly 0.0 — the
+    byte-identity guarantee for historical BENCH snapshots."""
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(engine="event"))
+    synthesize(TraceConfig(n_jobs=10, seed=2, n_failures=0, n_stragglers=0),
+               list(c.nodes)).install(sim, comp)
+    m = sim.run()
+    assert m["shared_occupancy"] == 0.0
+    assert m["frag_chips"] == 0.0
+    assert m["spot_preemptions"] == 0.0
+
+
+# -- trace format 3 back-compat ----------------------------------------------
+
+def test_format1_dict_loads_with_tier_defaults():
+    d = {"format": 1,
+         "jobs": [{"id": "j0", "submit_time": 0.0, "chips": 4,
+                   "total_steps": 10}],
+         "events": []}
+    tr = Trace.from_dict(d)
+    assert tr.jobs[0].isolation == "exclusive"
+    assert tr.jobs[0].spot is False
+    spec = tr.jobs[0].to_spec()
+    spec.validate()
+    assert spec.resources.quanta == 4
+
+
+@pytest.mark.parametrize("name", ["month-50k", "month-50k-rel",
+                                  "month-50k-mixed"])
+def test_committed_artifacts_load_and_resave_byte_stable(tmp_path, name):
+    path = os.path.join(TRACE_DIR, f"{name}-seed0.json.gz")
+    tr = Trace.load(path)
+    assert len(tr.jobs) == 50000
+    p1, p2 = str(tmp_path / "a.json.gz"), str(tmp_path / "b.json.gz")
+    tr.save(p1)
+    Trace.load(p1).save(p2)
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+    with gzip.open(p1, "rt") as f:
+        assert json.load(f)["format"] == 3
+
+
+def test_mixed_artifact_matches_its_preset():
+    path = os.path.join(TRACE_DIR, "month-50k-mixed-seed0.json.gz")
+    tr = Trace.load(path)
+    stored = tr.meta["config"]
+    want = json.loads(json.dumps(dataclasses.asdict(
+        scale_preset("month-50k-mixed", seed=0))))
+    assert stored == want
+    frac = [j for j in tr.jobs if j.isolation != "exclusive"]
+    assert frac and all(j.min_chips == 0 for j in frac)
+    assert any(isinstance(j.chips, str) for j in frac)   # "p/q" rows exist
+    assert any(j.spot for j in tr.jobs)
+
+
+def test_legacy_config_synthesis_untouched_by_format3_knobs():
+    """With the tier knobs at their defaults no extra randoms are drawn:
+    format-1/2 configs resynthesize the exact same rows as before."""
+    cfg = TraceConfig(n_jobs=12, seed=9, n_failures=0, n_stragglers=0)
+    rows = [dataclasses.asdict(j) for j in synthesize(cfg, []).jobs]
+    assert all(r["isolation"] == "exclusive" and r["spot"] is False
+               for r in rows)
+    again = [dataclasses.asdict(j) for j in synthesize(cfg, []).jobs]
+    assert rows == again
+
+
+def test_materialize_memoization_matches_naive_compile(tmp_path):
+    tr = synthesize(mixed_trace_cfg(seed=3), [f"n{i}" for i in range(8)])
+    comp = mkcompiler(tmp_path)
+    memo = tr.materialize(comp)
+    naive = [Job(id=tj.id, plan=comp.compile(tj.to_spec()),
+                 submit_time=tj.submit_time) for tj in tr.jobs]
+    for a, b in zip(memo, naive):
+        assert (a.id, a.submit_time) == (b.id, b.submit_time)
+        assert a.plan.spec == b.plan.spec
+        assert a.plan.mesh_request == b.plan.mesh_request
+    # the point of the memo: far fewer compiles than rows
+    shapes = {(tj.chips, tj.min_chips, tj.priority, tj.preemptible,
+               tj.work_per_step, tj.comm_frac, tj.tenant, tj.isolation,
+               tj.spot) for tj in tr.jobs}
+    assert len(shapes) < len(tr.jobs)
