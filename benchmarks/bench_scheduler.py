@@ -28,6 +28,18 @@ Each invocation writes a ``BENCH_scheduler.json`` snapshot next to the repo
 root so later PRs can track the perf trajectory: one entry per scale point
 under ``points`` (the default point is mirrored at the top level for
 backwards compatibility with earlier snapshots).
+
+Parallel runs: ``--workers N`` fans the selected (policy, seed) pairs out
+over a pool of spawned single-use worker processes — one policy+seed per
+worker, each env-pinned via ``repro.runtime`` (single-threaded BLAS/XLA,
+quiet logging) and gc-isolated for its whole run, with results merged back
+deterministically in (policy, seed) order so the snapshot is byte-identical
+to a serial run of the same selection no matter which worker finishes
+first (wall_s / max_rss_mb are measured per run and exempt).  Year-scale
+points (>= STREAM_JOBS_THRESHOLD rows) replay through the streaming trace
+path (``install_stream`` / ``ClusterSim.feed`` + compacted completed-job
+metrics) in both serial and parallel modes, so a 1M-job year stays under a
+bounded memory footprint; ``max_rss_mb`` in the snapshot records it.
 """
 from __future__ import annotations
 
@@ -35,7 +47,9 @@ import argparse
 import dataclasses
 import gc
 import json
+import multiprocessing
 import os
+import resource
 import tempfile
 import time
 from typing import Dict, List, Tuple
@@ -45,7 +59,8 @@ from repro.core.cluster import TierConfig
 from repro.core.compiler import ArtifactStore, TaskCompiler
 from repro.core.scheduler import TenantPlan
 from repro.data.trace import (SCALE_PRESETS, Trace, TraceConfig, horizon,
-                              scale_preset, synthesize)
+                              read_tail, scale_preset, synthesize,
+                              synthesize_stream)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            os.pardir, "BENCH_scheduler.json")
@@ -94,16 +109,30 @@ def config_matches(artifact_config, cfg: TraceConfig) -> bool:
     return merged == want
 
 
+# points at/above this row count replay through the streaming path
+# (install_stream / ClusterSim.feed, compacted completed-job metrics, no
+# event logs) in BOTH serial and parallel modes — the year-1M point's
+# numbers come from the bounded-memory replay by construction
+STREAM_JOBS_THRESHOLD = 200_000
+
+# serial-mode memo so one point's artifact is loaded once, not per policy
+_TRACE_CACHE: Dict[tuple, Trace] = {}
+
+
 def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
-              overridden: bool, save: bool) -> Trace:
+              overridden: bool, save: bool = False) -> Trace:
     """Load the committed trace artifact when it matches ``cfg``; otherwise
     synthesize.  ``save`` forces resynthesis and (re)writes the artifact —
     the refresh path when the synthesizer itself changes."""
+    key = (name, seed, trace_dir, overridden)
+    if not save and key in _TRACE_CACHE:
+        return _TRACE_CACHE[key]
     cfg = dataclasses.replace(cfg, seed=seed)
     path = artifact_path(trace_dir, name, seed)
     if not overridden and not save and os.path.exists(path):
         trace = Trace.load(path)
         if config_matches(trace.meta.get("config"), cfg):
+            _TRACE_CACHE[key] = trace
             return trace
         print(f"  [trace artifact {os.path.basename(path)} is stale "
               f"(config mismatch); resynthesizing]")
@@ -112,84 +141,215 @@ def get_trace(name: str, cfg: TraceConfig, seed: int, trace_dir: str,
         os.makedirs(trace_dir, exist_ok=True)
         trace.save(path)
         print(f"  [trace artifact saved -> {os.path.normpath(path)}]")
+    _TRACE_CACHE[key] = trace
     return trace
 
 
-def run_policy(policy: str, traces: List[Trace], engine: str = "event",
-               reliability_aware: bool = False,
-               trace_cfg: TraceConfig = None) -> Dict:
-    agg: Dict[str, float] = {}
-    wall = 0.0
-    tiered = trace_cfg is not None and (trace_cfg.mig_chips_per_host
-                                        or trace_cfg.shared_chips_per_host)
-    for trace in traces:
-        # collect the (cyclic) sim/job graphs of earlier runs up front: at
-        # month scale the gen-2 collections they otherwise trigger land in
-        # whichever policy runs last and skew its wall by tens of percent
-        gc.collect()
-        with tempfile.TemporaryDirectory() as td:
-            compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
-            cluster = make_cluster(trace_cfg)
-            pol = make_policy(policy,
-                              quotas={"lab-c": 192},
-                              tenant_weights={"lab-a": 2, "lab-b": 1,
-                                              "lab-c": 1},
-                              reliability_aware=reliability_aware,
-                              plans=MIXED_TENANT_PLANS if tiered else None)
-            sim = ClusterSim(cluster, pol, SimConfig(
-                tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
-                restart_cost_s=15, engine=engine))
+def save_artifact(name: str, cfg: TraceConfig, seed: int,
+                  trace_dir: str) -> str:
+    """(Re)write one preset's artifact — streamed for year-scale presets,
+    so the job list never materializes even while saving 1M rows."""
+    cfg = dataclasses.replace(cfg, seed=seed)
+    path = artifact_path(trace_dir, name, seed)
+    os.makedirs(trace_dir, exist_ok=True)
+    if cfg.n_jobs >= STREAM_JOBS_THRESHOLD:
+        synthesize_stream(cfg, list(make_cluster(cfg).nodes)).save(path)
+    else:
+        synthesize(cfg, list(make_cluster(cfg).nodes)).save(path)
+    print(f"  [trace artifact saved -> {os.path.normpath(path)}]")
+    _TRACE_CACHE.pop((name, seed, trace_dir, False), None)
+    return path
+
+
+def run_one(policy: str, name: str, cfg: TraceConfig, seed: int,
+            engine: str = "event", trace_dir: str = DEFAULT_TRACE_DIR,
+            overridden: bool = False) -> Dict:
+    """One policy x one seed -> metrics dict: the unit of work both the
+    serial loop and the pool workers execute, so parallel and serial runs
+    produce identical metrics by construction."""
+    # collect the (cyclic) sim/job graphs of earlier runs up front: at
+    # month scale the gen-2 collections they otherwise trigger land in
+    # whichever policy runs last and skew its wall by tens of percent
+    gc.collect()
+    reliability_aware = cfg.reliability is not None
+    tiered = bool(cfg.mig_chips_per_host or cfg.shared_chips_per_host)
+    streamed = cfg.n_jobs >= STREAM_JOBS_THRESHOLD
+    with tempfile.TemporaryDirectory() as td:
+        compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
+        cluster = make_cluster(cfg)
+        pol = make_policy(policy,
+                          quotas={"lab-c": 192},
+                          tenant_weights={"lab-a": 2, "lab-b": 1,
+                                          "lab-c": 1},
+                          reliability_aware=reliability_aware,
+                          plans=MIXED_TENANT_PLANS if tiered else None)
+        sim = ClusterSim(cluster, pol, SimConfig(
+            tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
+            restart_cost_s=15, engine=engine,
+            record_events=not streamed, compact_completed=streamed))
+        if streamed:
+            until = _install_streamed(sim, compiler, name, cfg, seed,
+                                      trace_dir, overridden)
+        else:
+            trace = get_trace(name, cfg, seed, trace_dir, overridden)
             trace.install(sim, compiler)
-            t0 = time.perf_counter()
-            m = sim.run(until=horizon(trace))
-            wall += time.perf_counter() - t0
-            for k, v in m.items():
-                agg[k] = agg.get(k, 0.0) + v / len(traces)
-    agg["wall_s"] = wall
+            until = horizon(trace)
+        t0 = time.perf_counter()
+        m = sim.run(until=until)
+        m["wall_s"] = time.perf_counter() - t0
+    m["max_rss_mb"] = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss \
+        / 1024.0
+    return m
+
+
+def _install_streamed(sim, compiler, name: str, cfg: TraceConfig, seed: int,
+                      trace_dir: str, overridden: bool) -> float:
+    """Attach a year-scale workload to the sim without materializing it:
+    from the matching committed artifact when there is one (two passes —
+    tail skim, then the lazily-compiled row feed), else regenerated row by
+    row from the preset seed.  Returns the run horizon."""
+    cfg = dataclasses.replace(cfg, seed=seed)
+    path = artifact_path(trace_dir, name, seed)
+    if not overridden and os.path.exists(path):
+        tail = read_tail(path)
+        if config_matches(tail.meta.get("config"), cfg):
+            from repro.data.trace import install_stream
+            install_stream(path, sim, compiler, tail=tail)
+            return tail.horizon()
+        print(f"  [trace artifact {os.path.basename(path)} is stale "
+              f"(config mismatch); resynthesizing]")
+    st = synthesize_stream(cfg, list(make_cluster(cfg).nodes))
+    st.install(sim, compiler)
+    return st.horizon()
+
+
+def merge_seeds(per_seed: List[Dict]) -> Dict:
+    """Seed-average per-run metrics exactly the way the historical serial
+    loop did (same accumulation order, same ``v / n`` terms), summing walls
+    and high-watering rss.  Deterministic given per-run metrics, so worker
+    completion order can never change the snapshot."""
+    agg: Dict[str, float] = {}
+    for m in per_seed:
+        for k, v in m.items():
+            if k in ("wall_s", "max_rss_mb"):
+                continue
+            agg[k] = agg.get(k, 0.0) + v / len(per_seed)
+    agg["wall_s"] = sum(m["wall_s"] for m in per_seed)
+    agg["max_rss_mb"] = round(max(m["max_rss_mb"] for m in per_seed), 1)
     return agg
+
+
+_ROW_HEADER = (f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
+               f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
+               f"{'preempt':>8s} {'restarts':>8s} {'mttf_h':>8s} "
+               f"{'repair_h':>8s} {'avoided':>7s} {'sh_occ':>6s} "
+               f"{'spot_pre':>8s} {'frag':>6s} {'rss_mb':>8s} "
+               f"{'wall_s':>8s}")
+
+
+def _print_row(pol: str, m: Dict) -> None:
+    print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
+          f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
+          f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
+          f"{m['restarts']:8.1f} {m['mttf_hours']:8.1f} "
+          f"{m['repair_hours']:8.2f} {m['restarts_avoided']:7.1f} "
+          f"{m['shared_occupancy']:6.3f} {m['spot_preemptions']:8.1f} "
+          f"{m['frag_chips']:6.2f} {m['max_rss_mb']:8.0f} "
+          f"{m['wall_s']:8.3f}")
+
+
+def _point_banner(name: str, cfg: TraceConfig, seeds) -> None:
+    reliability_aware = cfg.reliability is not None
+    print(f"\n== scale point {name!r}: {cfg.n_jobs} jobs, "
+          f"diurnal={cfg.diurnal_amplitude}, "
+          f"rack_failure_frac={cfg.rack_failure_frac}, "
+          f"reliability={'age-model' if reliability_aware else 'memoryless'}, "
+          f"seeds={list(seeds)} ==")
+
+
+def _point_dict(cfg: TraceConfig, seeds,
+                rows: List[Tuple[str, Dict]]) -> Dict:
+    return {
+        "n_jobs": cfg.n_jobs,
+        "seeds": list(seeds),
+        "diurnal_amplitude": cfg.diurnal_amplitude,
+        "rack_failure_frac": cfg.rack_failure_frac,
+        "reliability_aware": cfg.reliability is not None,
+        "total_wall_s": sum(m["wall_s"] for _, m in rows),
+        "results": {pol: m for pol, m in rows},
+    }
 
 
 def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
               seeds, engine: str, trace_dir: str = DEFAULT_TRACE_DIR,
               overridden: bool = False, save_traces: bool = False) -> Dict:
-    # points synthesized under the age-dependent failure model run
-    # reliability-aware policies (failure-aware placement + survival-weighted
-    # goodput); memoryless points keep the default behavior byte-identical
-    reliability_aware = trace_cfg.reliability is not None
-    print(f"\n== scale point {name!r}: {trace_cfg.n_jobs} jobs, "
-          f"diurnal={trace_cfg.diurnal_amplitude}, "
-          f"rack_failure_frac={trace_cfg.rack_failure_frac}, "
-          f"reliability={'age-model' if reliability_aware else 'memoryless'}, "
-          f"seeds={list(seeds)} ==")
-    traces = [get_trace(name, trace_cfg, seed, trace_dir, overridden,
-                        save_traces) for seed in seeds]
-    print(f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
-          f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
-          f"{'preempt':>8s} {'restarts':>8s} {'mttf_h':>8s} "
-          f"{'repair_h':>8s} {'avoided':>7s} {'sh_occ':>6s} "
-          f"{'spot_pre':>8s} {'frag':>6s} {'wall_s':>8s}")
+    """Serial path: every (policy, seed) in order, in this process.
+    Points synthesized under the age-dependent failure model run
+    reliability-aware policies (failure-aware placement + survival-weighted
+    goodput); memoryless points keep the default behavior byte-identical."""
+    if save_traces and not overridden:
+        for seed in seeds:
+            save_artifact(name, trace_cfg, seed, trace_dir)
+    _point_banner(name, trace_cfg, seeds)
+    print(_ROW_HEADER)
     rows: List[Tuple[str, Dict]] = []
     for pol in policies:
-        m = run_policy(pol, traces, engine=engine,
-                       reliability_aware=reliability_aware,
-                       trace_cfg=trace_cfg)
+        m = merge_seeds([run_one(pol, name, trace_cfg, seed, engine,
+                                 trace_dir, overridden) for seed in seeds])
         rows.append((pol, m))
-        print(f"{pol:10s} {m['makespan']:10.0f} {m['avg_wait']:10.1f} "
-              f"{m['avg_jct']:10.1f} {m['p95_jct']:10.1f} "
-              f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
-              f"{m['restarts']:8.1f} {m['mttf_hours']:8.1f} "
-              f"{m['repair_hours']:8.2f} {m['restarts_avoided']:7.1f} "
-              f"{m['shared_occupancy']:6.3f} {m['spot_preemptions']:8.1f} "
-              f"{m['frag_chips']:6.2f} {m['wall_s']:8.3f}")
-    return {
-        "n_jobs": trace_cfg.n_jobs,
-        "seeds": list(seeds),
-        "diurnal_amplitude": trace_cfg.diurnal_amplitude,
-        "rack_failure_frac": trace_cfg.rack_failure_frac,
-        "reliability_aware": reliability_aware,
-        "total_wall_s": sum(m["wall_s"] for _, m in rows),
-        "results": {pol: m for pol, m in rows},
-    }
+        _print_row(pol, m)
+    return _point_dict(trace_cfg, seeds, rows)
+
+
+# -- parallel runner ---------------------------------------------------------
+
+def _pool_worker(task: tuple) -> tuple:
+    """One (point, policy, seed) in a fresh spawned process.  Env pinning +
+    gc isolation happen here, once, for the whole run (maxtasksperchild=1:
+    nothing this run allocates or disables can leak into another)."""
+    from repro import runtime
+    runtime.configure_worker()
+    name, cfg, seed, policy, engine, trace_dir, overridden = task
+    m = run_one(policy, name, cfg, seed, engine, trace_dir, overridden)
+    return name, policy, seed, m
+
+
+def run_points_parallel(names: List[str], cfgs: Dict[str, TraceConfig],
+                        point_seeds: Dict[str, tuple], policies: List[str],
+                        engine: str, workers: int,
+                        trace_dir: str = DEFAULT_TRACE_DIR,
+                        overridden: bool = False) -> Dict[str, Dict]:
+    """Fan every (point, policy, seed) out over a spawn pool and merge the
+    results in deterministic (point, policy, seed) order.  Workers are
+    single-use (maxtasksperchild=1) and stream year-scale points from the
+    artifact themselves, so no trace crosses the process boundary — tasks
+    pickle as (name, config, seed) triples."""
+    tasks = [(name, cfgs[name], seed, pol, engine, trace_dir, overridden)
+             for name in names
+             for pol in policies
+             for seed in point_seeds[name]]
+    results: Dict[tuple, Dict] = {}
+    ctx = multiprocessing.get_context("spawn")
+    t0 = time.perf_counter()
+    with ctx.Pool(processes=workers, maxtasksperchild=1) as pool:
+        for name, pol, seed, m in pool.imap_unordered(_pool_worker, tasks):
+            results[(name, pol, seed)] = m
+            print(f"  [worker done {len(results)}/{len(tasks)}: "
+                  f"{name}/{pol}/seed{seed} wall={m['wall_s']:.3f}s "
+                  f"rss={m['max_rss_mb']:.0f}MB "
+                  f"elapsed={time.perf_counter() - t0:.1f}s]", flush=True)
+    points: Dict[str, Dict] = {}
+    for name in names:
+        _point_banner(name, cfgs[name], point_seeds[name])
+        print(_ROW_HEADER)
+        rows = []
+        for pol in policies:
+            m = merge_seeds([results[(name, pol, seed)]
+                             for seed in point_seeds[name]])
+            rows.append((pol, m))
+            _print_row(pol, m)
+        points[name] = _point_dict(cfgs[name], point_seeds[name], rows)
+    return points
 
 
 TRACE_HELP = """\
@@ -234,7 +394,27 @@ trace-artifact replay workflow:
   artifact is committed for exactly this purpose.  After a bench run,
   gate regressions with:  python benchmarks/check_bench.py
   (fails on >20% wall_s growth or metric drift outside the documented
-  tolerances vs the committed snapshot)."""
+  tolerances vs the committed snapshot).
+
+parallel runs:
+  --workers N fans the selected (point, policy, seed) runs over N spawned
+  single-use worker processes (repro.runtime pins each to one BLAS/XLA
+  thread and disables its cyclic gc for the whole run).  Results merge in
+  deterministic (point, policy, seed) order, so the snapshot is identical
+  to a serial run of the same selection — only wall_s (summed per-run
+  walls) and max_rss_mb (per-process high-water) are measured per run.
+  --seeds widens the default preset's seed set (scale points pin seed 0 so
+  committed artifacts replay); with --workers those seeds run concurrently.
+
+year-scale streaming:
+  Presets at/above 200k jobs (year-1M) replay through the streaming path:
+  the artifact is pull-parsed row by row (install_stream), arrivals feed
+  the sim lazily (ClusterSim.feed), per-event logs are disabled and
+  completed jobs compact into scalar accumulators, so resident memory
+  stays bounded no matter the trace length — max_rss_mb in the snapshot
+  records the footprint.  Compacted metrics sum in completion order, so
+  the year-1M point carries its own baseline (it is not byte-comparable
+  to a hypothetical materialized replay at the last ulp)."""
 
 
 def main(argv: List[str] = None) -> Dict[str, Dict]:
@@ -250,6 +430,10 @@ def main(argv: List[str] = None) -> Dict[str, Dict]:
                     help="override n_jobs (applies to every selected preset)")
     ap.add_argument("--seeds", type=int, default=3,
                     help="seeds for the default preset (scale points run 1)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="run (policy, seed) pairs on N spawned worker "
+                         "processes (deterministic merge; 1 = in-process "
+                         "serial)")
     ap.add_argument("--diurnal", type=float, default=None,
                     help="override diurnal arrival-rate amplitude in [0, 1]")
     ap.add_argument("--policies",
@@ -274,19 +458,36 @@ def main(argv: List[str] = None) -> Dict[str, Dict]:
     policies = args.policies.split(",")
     overridden = args.jobs is not None or args.diurnal is not None
 
-    print(f"engine={engine}")
-    points: Dict[str, Dict] = {}
+    cfgs: Dict[str, TraceConfig] = {}
+    point_seeds: Dict[str, tuple] = {}
     for name in names:
         cfg = scale_preset(name)
         if args.jobs is not None:
             cfg = dataclasses.replace(cfg, n_jobs=args.jobs)
         if args.diurnal is not None:
             cfg = dataclasses.replace(cfg, diurnal_amplitude=args.diurnal)
-        seeds = tuple(range(args.seeds)) if name == "default" else (0,)
-        points[name] = run_point(name, cfg, policies, seeds, engine,
-                                 trace_dir=args.trace_dir,
-                                 overridden=overridden,
-                                 save_traces=args.save_traces)
+        cfgs[name] = cfg
+        point_seeds[name] = tuple(range(args.seeds)) if name == "default" \
+            else (0,)
+
+    print(f"engine={engine} workers={max(1, args.workers)}")
+    if args.workers > 1:
+        # artifact refresh stays in the parent: a single writer per file
+        if args.save_traces and not overridden:
+            for name in names:
+                for seed in point_seeds[name]:
+                    save_artifact(name, cfgs[name], seed, args.trace_dir)
+        points = run_points_parallel(names, cfgs, point_seeds, policies,
+                                     engine, args.workers,
+                                     trace_dir=args.trace_dir,
+                                     overridden=overridden)
+    else:
+        points = {name: run_point(name, cfgs[name], policies,
+                                  point_seeds[name], engine,
+                                  trace_dir=args.trace_dir,
+                                  overridden=overridden,
+                                  save_traces=args.save_traces)
+                  for name in names}
 
     if args.out:
         snapshot = {"bench": "bench_scheduler", "engine": engine,

@@ -46,7 +46,10 @@ WALL_REGRESSION = 0.20          # fail on > 20% wall_s growth ...
 WALL_NOISE_FLOOR_S = 0.25       # ... but only above this absolute delta
 EXACT_POLICIES = {"fifo", "priority", "backfill"}
 METRIC_REL_TOL = 0.05           # fair / goodput metric drift allowance
-SKIP_KEYS = {"wall_s"}          # walls are gated separately
+# walls are gated separately; peak rss depends on the host and on how many
+# runs shared the process (serial vs --workers), so it is recorded but not
+# drift-gated
+SKIP_KEYS = {"wall_s", "max_rss_mb"}
 
 
 def load_baseline(ref: str) -> Dict:

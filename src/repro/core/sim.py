@@ -53,7 +53,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 from repro.core.cluster import Cluster
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
@@ -71,6 +71,19 @@ class SimConfig:
     seed: int = 0
     max_time: float = 200000.0
     engine: str = "event"                 # "event" | "tick"
+    # memory bounds for year-scale replay (both default to the historical
+    # unbounded behavior so existing runs stay byte-identical):
+    # record_events=False drops the per-job/state-transition logs (the sim
+    # trace and Job.events grow O(transitions) — ~5M tuples on a 1M-job
+    # year); compact_completed=True folds each completed job into scalar
+    # metric accumulators and frees its Job/plan/clock state, so retained
+    # memory tracks the *live* job set, not every job ever run.  Metric
+    # sums then accrue in completion order rather than admission order, so
+    # float aggregates can differ from the unbounded path in the last ulps
+    # (counts and per-job values are exact) — a compacted point gets its
+    # own baseline, it is not byte-compared against an unbounded one.
+    record_events: bool = True
+    compact_completed: bool = False
 
 
 @dataclass
@@ -133,6 +146,21 @@ class ClusterSim:
         self._tier_t = 0.0                    # metrics clock
         self._occ_shared_s = 0.0              # integral of shared_occupancy
         self._frag_chip_s = 0.0               # integral of frag_chips
+        # lazy arrival source (ClusterSim.feed): jobs pulled one at a time
+        # so the heap / _arrivals never hold a year-1M workload up front
+        self._feed: Optional[Iterator[Job]] = None
+        self._feed_head: Optional[Job] = None     # tick-engine lookahead
+        # compact_completed accumulators (scalar folds of completed jobs)
+        self._done_n = 0
+        self._done_wait_sum = 0.0
+        self._done_wait_n = 0
+        self._done_jcts: List[float] = []
+        self._done_makespan = 0.0
+        self._done_chip_s = 0.0
+        self._done_preemptions = 0
+        self._done_restarts = 0
+        self._done_submitted: Dict[str, int] = {}
+        self._done_admitted: Dict[str, int] = {}
 
     # -- workload ------------------------------------------------------------
     # submit/inject only append: sorting a 50k-job month trace once per
@@ -148,6 +176,26 @@ class ClusterSim:
     def inject(self, event: SimEvent) -> None:
         self.pending_events.append(event)
         self._workload_dirty = True
+
+    def feed(self, jobs: Iterable[Job]) -> None:
+        """Attach a lazy arrival source: an iterator of Jobs in
+        nondecreasing ``submit_time`` order (a streamed trace replay).
+        Jobs are pulled one at a time — the next arrival only — as the sim
+        advances, so the arrival backlog never materializes; combine with
+        ``SimConfig.compact_completed`` for a fully bounded year-scale
+        replay.  One source per sim; ``submit`` still works alongside it
+        (pre-registered jobs, tests)."""
+        if self._feed is not None:
+            raise RuntimeError("a job source is already attached")
+        self._feed = iter(jobs)
+        self._feed_head = next(self._feed, None)
+
+    def _feed_pull(self) -> Optional[Job]:
+        """Advance the lookahead by one job (None once exhausted)."""
+        head, self._feed_head = self._feed_head, None
+        if head is not None:
+            self._feed_head = next(self._feed, None)
+        return head
 
     def _sort_workload(self) -> None:
         if self._workload_dirty:
@@ -171,6 +219,8 @@ class ClusterSim:
         self._log(job, "submitted")
 
     def _log(self, job: Job, msg: str) -> None:
+        if not self.cfg.record_events:
+            return      # year-scale replay: O(transitions) logs stay off
         job.log(self.now, msg)
         self.trace.append((self.now, job.id, msg))
 
@@ -235,6 +285,34 @@ class ClusterSim:
             self._pending_jobs[job.id] = job
             self.policy.job_added(job)
         self._log(job, f"stop -> {state.value} {reason}")
+        if state == JobState.COMPLETED and self.cfg.compact_completed:
+            self._compact(job)
+
+    def _compact(self, job: Job) -> None:
+        """Fold a completed job into the scalar metric accumulators and
+        drop every reference the sim holds to it, so retained memory is
+        O(live jobs) on a year-scale replay instead of O(jobs ever run)."""
+        self._done_n += 1
+        self._done_submitted[job.tenant] = \
+            self._done_submitted.get(job.tenant, 0) + 1
+        if job.first_start is not None:
+            self._done_wait_sum += job.first_start - job.submit_time
+            self._done_wait_n += 1
+            self._done_admitted[job.tenant] = \
+                self._done_admitted.get(job.tenant, 0) + 1
+        if job.end_time:
+            self._done_jcts.append(job.end_time - job.submit_time)
+            self._done_makespan = max(self._done_makespan, job.end_time)
+        self._done_chip_s += job.total_steps \
+            * job.spec.entry.get("work_per_step", 1.0)
+        self._done_preemptions += job.preemptions
+        self._done_restarts += job.restarts
+        del self.jobs[job.id]
+        self._pause_until.pop(job.id, None)
+        self._last_ckpt.pop(job.id, None)
+        # _fresh treats a missing job as stale, so any heap events still
+        # queued under the old generation die on pop
+        self._gen.pop(job.id, None)
 
     def _apply(self, actions) -> None:
         for a in actions:
@@ -388,6 +466,9 @@ class ClusterSim:
         while self._arrivals and self._arrivals[0][0] <= self.now:
             _, job = self._arrivals.pop(0)
             self._admit(job)
+        while self._feed_head is not None \
+                and self._feed_head.submit_time <= self.now:
+            self._admit(self._feed_pull())
         # injected events
         while self.pending_events and self.pending_events[0].time <= self.now:
             self._apply_injected(self.pending_events.pop(0))
@@ -470,6 +551,17 @@ class ClusterSim:
         if kind == "arrival":
             self._admit(payload)
             self._n_external -= 1
+            return True
+        if kind == "arrival_next":
+            # lazy arrival source: admit, then pull exactly one more job so
+            # the heap only ever holds the next arrival, not the backlog
+            self._admit(payload)
+            self._n_external -= 1
+            nxt = self._feed_pull()
+            if nxt is not None:
+                self._push(max(nxt.submit_time, self.now),
+                           "arrival_next", nxt)
+                self._n_external += 1
             return True
         if kind == "inject":
             self._apply_injected(payload)
@@ -561,6 +653,10 @@ class ClusterSim:
             self._push(ev.time, "inject", ev)
             self._n_external += 1
         self.pending_events = []
+        if self._feed_head is not None:
+            nxt = self._feed_pull()
+            self._push(max(nxt.submit_time, self.now), "arrival_next", nxt)
+            self._n_external += 1
         wake = self.policy.wakeup_interval()
         if wake:
             self._push(self.now + wake, "wakeup", wake)
@@ -596,26 +692,36 @@ class ClusterSim:
         return self.metrics()
 
     def _all_done(self) -> bool:
-        return (not self._arrivals and bool(self.jobs)
+        return (not self._arrivals and self._feed_head is None
+                and bool(self.jobs or self._done_n)
                 and not self._pending_jobs and not self._running_jobs)
 
     # -- metrics ---------------------------------------------------------------
 
     def metrics(self) -> Dict[str, float]:
+        # every aggregate below merges the compact_completed accumulators
+        # with the jobs still resident; on the default (unbounded) path the
+        # accumulators are exact zeros / empties, so the arithmetic — and
+        # therefore the floats — are identical to the historical ones
         self._accrue_tier_metrics()       # flush the tail interval
         done = [j for j in self.jobs.values() if j.state == JobState.COMPLETED]
         waits = [(j.first_start - j.submit_time) for j in done
                  if j.first_start is not None]
-        jcts = [(j.end_time - j.submit_time) for j in done if j.end_time]
-        makespan = max((j.end_time for j in done if j.end_time), default=0.0)
-        total_chip_s = sum(j.total_steps * j.spec.entry.get("work_per_step", 1.0)
-                           for j in done)
+        jcts = self._done_jcts \
+            + [(j.end_time - j.submit_time) for j in done if j.end_time]
+        makespan = max((j.end_time for j in done if j.end_time),
+                       default=self._done_makespan)
+        total_chip_s = self._done_chip_s \
+            + sum(j.total_steps * j.spec.entry.get("work_per_step", 1.0)
+                  for j in done)
+        wait_sum = self._done_wait_sum + sum(waits)
+        wait_n = self._done_wait_n + len(waits)
         # reliability: fleet MTTF observed over the run, repair debt, and the
         # failures that hit empty nodes (with failure-aware placement, the
         # restarts avoided); per-tenant admission = share of a tenant's
         # submissions that got chips at least once
-        submitted: Dict[str, int] = {}
-        admitted: Dict[str, int] = {}
+        submitted: Dict[str, int] = dict(self._done_submitted)
+        admitted: Dict[str, int] = dict(self._done_admitted)
         for j in self.jobs.values():
             submitted[j.tenant] = submitted.get(j.tenant, 0) + 1
             if j.first_start is not None:
@@ -634,14 +740,16 @@ class ClusterSim:
             "spot_preemptions": float(self._spot_preempts),
             "shared_occupancy": self._occ_shared_s / max(self.now, 1e-9),
             "frag_chips": self._frag_chip_s / max(self.now, 1e-9),
-            "completed": len(done),
-            "jobs": len(self.jobs),
+            "completed": self._done_n + len(done),
+            "jobs": self._done_n + len(self.jobs),
             "makespan": makespan,
-            "avg_wait": sum(waits) / len(waits) if waits else 0.0,
+            "avg_wait": wait_sum / wait_n if wait_n else 0.0,
             "avg_jct": sum(jcts) / len(jcts) if jcts else 0.0,
             "p95_jct": sorted(jcts)[int(0.95 * (len(jcts) - 1))] if jcts else 0.0,
-            "preemptions": sum(j.preemptions for j in self.jobs.values()),
-            "restarts": sum(j.restarts for j in self.jobs.values()),
+            "preemptions": self._done_preemptions
+            + sum(j.preemptions for j in self.jobs.values()),
+            "restarts": self._done_restarts
+            + sum(j.restarts for j in self.jobs.values()),
             "useful_chip_seconds": total_chip_s,
             "cluster_chip_seconds": self.cluster.total_chips * max(self.now, 1e-9),
             "utilization_proxy": total_chip_s

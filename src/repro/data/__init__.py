@@ -1,4 +1,7 @@
 from repro.data.synthetic import SyntheticLM, input_specs
 from repro.data.trace import (SCALE_PRESETS, Incident, ReliabilityConfig,
-                              Trace, TraceConfig, TraceJob, hazard_per_day,
-                              horizon, mtbf_days, scale_preset, synthesize)
+                              StreamTrace, Trace, TraceConfig, TraceJob,
+                              TraceReader, TraceTail, hazard_per_day,
+                              horizon, install_stream, mtbf_days, read_tail,
+                              scale_preset, synthesize, synthesize_stream,
+                              write_trace)

@@ -28,7 +28,7 @@ campus fleets' wear-out curve, à la the Meta reliability study), lognormal
 repair times split into *transient* restarts and *hard* repairs, and
 first-class :class:`Incident` records next to the flat event list.
 
-Format 3 (this PR) adds the isolation-tier mix: each job row carries an
+Format 3 adds the isolation-tier mix: each job row carries an
 ``isolation`` tier (``exclusive`` whole chips / ``mig`` fractional
 partitions / ``shared`` time-sliced slots) and a ``spot`` flag, and
 ``chips`` may be an exact ``"p/q"`` fraction of one chip for sub-chip
@@ -43,18 +43,33 @@ ExecutionPlan -> Job and submits it together with the injected events, and
 installs the per-node install ages into the sim's cluster so failure-aware
 placement sees the age signal from t=0.
 
+Streaming (year-1M scale): everything above also exists as a constant-memory
+path that never materializes the job list.  :func:`synthesize_stream` wraps
+a config in a :class:`StreamTrace` whose ``iter_jobs()`` regenerates rows on
+demand from the seed (the ops events are recovered by replaying the rng
+stream once with the rows discarded, so streamed and materialized synthesis
+are byte-identical); :func:`write_trace` writes job rows incrementally into
+the same byte-stable gzip container ``Trace.save`` produces;
+:class:`TraceReader` pull-parses an artifact row by row; and
+``install_stream``/:class:`StreamTrace.install` feed the sim's lazy arrival
+source (``ClusterSim.feed``) through the same memoized spec compilation as
+``Trace.install``, so a 1M-job year replays without the flat job list, the
+per-row Job graph, or the full event heap ever being resident at once.
+
 Virtual-time only; nothing here touches JAX.
 """
 from __future__ import annotations
 
 import dataclasses
 import gzip
+import itertools
 import json
 import math
 import random
 from dataclasses import dataclass, field
 from fractions import Fraction
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Dict, IO, Iterable, Iterator, List, Optional, Sequence,
+                    Tuple, Union)
 
 from repro.core.schema import (TIER_QUANTA, ResourceSpec, RuntimeEnv,
                                TaskSpec, chips_repr, parse_chips)
@@ -206,38 +221,25 @@ class Trace:
     # -- replay --------------------------------------------------------------
 
     def materialize(self, compiler) -> List[Job]:
-        """Compile every row into a Job, memoizing plan compilation across
-        rows that differ only in name/steps/estimate.  Synthetic traces have
-        a few hundred distinct (chips, tenant, flags) shapes across 50k rows
-        — compiling one template per shape and ``dataclasses.replace``-ing
-        the per-row fields cuts install time from ~30s to well under 1s at
-        month scale without changing any scheduler-visible field."""
-        jobs: List[Job] = []
-        templates: Dict[tuple, object] = {}
-        for tj in self.jobs:
-            key = (tj.chips, tj.min_chips, tj.priority, tj.preemptible,
-                   tj.work_per_step, tj.comm_frac, tj.tenant, tj.isolation,
-                   tj.spot)
-            tmpl = templates.get(key)
-            if tmpl is None:
-                tmpl = templates[key] = compiler.compile(tj.to_spec())
-            spec = dataclasses.replace(
-                tmpl.spec, name=tj.id, total_steps=tj.total_steps,
-                estimated_duration_s=tj.estimated_duration_s
-                or float(tj.total_steps))
-            jobs.append(Job(id=tj.id,
-                            plan=dataclasses.replace(tmpl, spec=spec),
-                            submit_time=tj.submit_time))
-        return jobs
+        """Compile every row into a Job (see :func:`compile_jobs`)."""
+        return list(compile_jobs(self.jobs, compiler))
 
-    def install(self, sim, compiler) -> None:
+    def install(self, sim, compiler, chunk: int = 2048) -> None:
         """Submit every job, inject every event, and install node install
-        ages into a ClusterSim's cluster."""
+        ages into a ClusterSim's cluster.  Jobs are compiled and submitted
+        in chunks straight off the row list — the full Job list of
+        ``materialize`` is never built, so peak memory during install is
+        one chunk of compiled jobs plus whatever the sim retains."""
         for nid, age in self.node_ages.items():
             if nid in sim.cluster.nodes:
                 sim.cluster.set_node_age(nid, age)
-        for job in self.materialize(compiler):
-            sim.submit(job)
+        it = compile_jobs(self.jobs, compiler)
+        while True:
+            batch = list(itertools.islice(it, chunk))
+            if not batch:
+                break
+            for job in batch:
+                sim.submit(job)
         for ev in self.events:
             sim.inject(SimEvent(ev.time, ev.kind, ev.node, ev.value, ev.info))
 
@@ -266,17 +268,13 @@ class Trace:
     def save(self, path: str) -> None:
         """Write the trace as JSON; a ``.gz`` suffix selects a byte-stable
         gzip container (mtime pinned to 0, compact separators) so committed
-        trace artifacts don't churn when regenerated."""
+        trace artifacts don't churn when regenerated.  The ``.gz`` path
+        routes through the incremental :func:`write_trace` writer — the
+        same bytes a streamed save produces."""
         if path.endswith(".gz"):
-            data = json.dumps(self.to_dict(), sort_keys=True,
-                              separators=(",", ":"))
-            with open(path, "wb") as f:
-                # filename="" keeps the member header path-independent
-                # (GzipFile would otherwise embed fileobj.name), so the
-                # same trace serializes to the same bytes anywhere
-                with gzip.GzipFile(fileobj=f, mode="wb", mtime=0,
-                                   filename="") as gz:
-                    gz.write(data.encode())
+            write_trace(path, self.jobs, events=self.events,
+                        incidents=self.incidents, meta=self.meta,
+                        node_ages=self.node_ages)
         else:
             with open(path, "w") as f:
                 json.dump(self.to_dict(), f, indent=1, sort_keys=True)
@@ -286,6 +284,44 @@ class Trace:
         opener = gzip.open if path.endswith(".gz") else open
         with opener(path, "rt") as f:
             return cls.from_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Streaming replay: memoized row compilation + lazy sim feed
+# ---------------------------------------------------------------------------
+
+def compile_jobs(rows: Iterable[TraceJob], compiler) -> Iterator[Job]:
+    """Compile trace rows into Jobs lazily, memoizing plan compilation
+    across rows that differ only in name/steps/estimate.  Synthetic traces
+    have a few hundred distinct (chips, tenant, flags) shapes across 50k+
+    rows — compiling one template per shape and ``dataclasses.replace``-ing
+    the per-row fields cuts install time from ~30s to well under 1s at
+    month scale without changing any scheduler-visible field.  Lazy so a
+    streamed year-1M replay never holds the compiled job list."""
+    templates: Dict[tuple, object] = {}
+    for tj in rows:
+        key = (tj.chips, tj.min_chips, tj.priority, tj.preemptible,
+               tj.work_per_step, tj.comm_frac, tj.tenant, tj.isolation,
+               tj.spot)
+        tmpl = templates.get(key)
+        if tmpl is None:
+            tmpl = templates[key] = compiler.compile(tj.to_spec())
+        spec = dataclasses.replace(
+            tmpl.spec, name=tj.id, total_steps=tj.total_steps,
+            estimated_duration_s=tj.estimated_duration_s
+            or float(tj.total_steps))
+        yield Job(id=tj.id, plan=dataclasses.replace(tmpl, spec=spec),
+                  submit_time=tj.submit_time)
+
+
+def _install_ops(sim, events: Sequence[SimEvent],
+                 node_ages: Dict[str, float]) -> None:
+    """The non-job half of an install: node ages + injected events."""
+    for nid, age in node_ages.items():
+        if nid in sim.cluster.nodes:
+            sim.cluster.set_node_age(nid, age)
+    for ev in events:
+        sim.inject(SimEvent(ev.time, ev.kind, ev.node, ev.value, ev.info))
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +385,27 @@ SCALE_PRESETS: Dict[str, TraceConfig] = {
         interactive_frac=0.3, interactive_shared_frac=0.5,
         interactive_steps=(200, 2400),
         spot_frac=0.1, mig_chips_per_host=1, shared_chips_per_host=1),
+    # one year at a million jobs over ~3.15e7 s — the streaming-scale gate.
+    # mean_gap 31.5 s puts steady-state load near 20% of the 512-chip fleet
+    # (vs ~12% for month-50k), so queues stay stable over the full horizon.
+    # Failures come from the age-dependent reliability model only (the
+    # memoryless injector would need ~6k sorted events; the Weibull hazard
+    # already yields a realistic year of incidents) and the preset is above
+    # STREAM_JOBS_THRESHOLD, so synthesis, the committed seed-0 artifact and
+    # replay all go through the streaming path: rows are generated/parsed
+    # one at a time, arrivals feed the sim lazily, and completed jobs
+    # compact to scalar accumulators — resident memory stays bounded for
+    # the whole year.  Compacted metrics sum in completion order, so this
+    # point carries its own baseline (see SimConfig.compact_completed).
+    "year-1M": TraceConfig(
+        n_jobs=1_000_000, mean_gap_s=31.5, diurnal_amplitude=0.7,
+        widths=(4, 4, 8, 8, 8, 16, 16, 32, 64, 128),
+        width_alpha=1.2, n_failures=0, rack_failure_frac=0.0,
+        n_stragglers=2000, ops_start=3600.0, ops_window=31400000.0,
+        reliability=ReliabilityConfig(
+            age_days=(30.0, 1460.0), weibull_shape=1.7,
+            weibull_scale_days=200.0, transient_frac=0.7,
+            repair_transient_s=(600.0, 0.6), repair_hard_s=(10800.0, 0.9))),
 }
 
 
@@ -401,9 +458,21 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
     """Generate a campus-shaped trace. ``nodes`` (cluster node ids, in rack
     order) is required when the config injects failures or stragglers."""
     rng = random.Random(cfg.seed)
+    jobs = list(_synth_jobs(cfg, rng))
+    events, incidents, node_ages = _synth_ops(cfg, rng, nodes)
+    return Trace(jobs=jobs, events=events,
+                 meta={"config": dataclasses.asdict(cfg)},
+                 incidents=incidents, node_ages=node_ages)
+
+
+def _synth_jobs(cfg: TraceConfig, rng: random.Random) -> Iterator[TraceJob]:
+    """Yield the job rows of a synthesis, consuming the rng stream exactly
+    as :func:`synthesize` always has (arrival times first, then per-job
+    draws), so a streamed generation is byte-identical to a materialized
+    one.  Ops synthesis (:func:`_synth_ops`) continues on the same rng
+    *after* this generator is exhausted."""
     tenant_names = [t for t, _ in cfg.tenants]
     tenant_weights = [w for _, w in cfg.tenants]
-    jobs: List[TraceJob] = []
     for i, t in enumerate(_arrival_times(cfg, rng)):
         # interactive sub-chip arm: short-circuits before drawing, so with
         # interactive_frac == 0 (every format-1/2 config) the rng stream is
@@ -414,7 +483,7 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
             per = TIER_QUANTA[tier]
             frac = Fraction(rng.randint(1, per), per)
             steps = rng.randint(*cfg.interactive_steps)
-            jobs.append(TraceJob(
+            yield TraceJob(
                 id=f"j{i}", submit_time=t,
                 chips=chips_repr(parse_chips(frac)), total_steps=steps,
                 tenant=rng.choices(tenant_names, tenant_weights)[0],
@@ -422,7 +491,7 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
                 comm_frac=0.0,
                 estimated_duration_s=steps * cfg.work_per_chip
                 * rng.uniform(*cfg.est_noise),
-                isolation=tier))
+                isolation=tier)
             continue
         chips = _sample_width(cfg, rng)
         steps = rng.randint(cfg.steps_min, cfg.steps_max)
@@ -432,12 +501,18 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
             if rng.random() < cfg.priority_frac else 0
         est = steps * cfg.work_per_chip * rng.uniform(*cfg.est_noise)
         spot = cfg.spot_frac > 0 and rng.random() < cfg.spot_frac
-        jobs.append(TraceJob(
+        yield TraceJob(
             id=f"j{i}", submit_time=t, chips=chips, total_steps=steps,
             tenant=tenant, min_chips=min_chips, priority=priority,
             work_per_step=chips * cfg.work_per_chip,
-            comm_frac=cfg.comm_frac, estimated_duration_s=est, spot=spot))
+            comm_frac=cfg.comm_frac, estimated_duration_s=est, spot=spot)
 
+
+def _synth_ops(cfg: TraceConfig, rng: random.Random, nodes: Sequence[str]
+               ) -> Tuple[List[SimEvent], List[Incident], Dict[str, float]]:
+    """The operational half of a synthesis: failures / incidents /
+    stragglers / node ages.  Consumes the rng stream immediately after
+    :func:`_synth_jobs` exhausted it."""
     events: List[SimEvent] = []
     incidents: List[Incident] = []
     node_ages: Dict[str, float] = {}
@@ -500,6 +575,303 @@ def synthesize(cfg: TraceConfig, nodes: Sequence[str] = ()) -> Trace:
                                "set_speed", n, 1.0))
     events.sort(key=lambda e: e.time)
     incidents.sort(key=lambda i: i.start)
-    return Trace(jobs=jobs, events=events,
-                 meta={"config": dataclasses.asdict(cfg)},
-                 incidents=incidents, node_ages=node_ages)
+    return events, incidents, node_ages
+
+
+# ---------------------------------------------------------------------------
+# Streaming synthesis / serialization
+# ---------------------------------------------------------------------------
+# A year-1M trace is ~30x the month artifacts; these paths generate, write,
+# read and install it without the flat job list (or the per-row dicts of a
+# whole-file json load) ever being resident at once.
+
+def _dumpc(obj) -> str:
+    """Compact sorted-key JSON — the exact serialization ``Trace.save``
+    uses, applied piecewise so concatenated pieces are byte-identical to a
+    whole-dict dump."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def write_trace(path: str, jobs: Iterable[TraceJob], *,
+                events: Sequence[SimEvent] = (),
+                incidents: Sequence[Incident] = (),
+                meta: Optional[Dict] = None,
+                node_ages: Optional[Dict[str, float]] = None) -> int:
+    """Incrementally write a ``.json.gz`` trace artifact, one job row at a
+    time.  Produces byte-for-byte the container ``Trace.save`` writes (gzip
+    mtime pinned to 0, empty member filename, compact sorted-key JSON with
+    top-level keys in sorted order), so streamed and materialized saves of
+    the same trace are indistinguishable on disk.  Returns the row count."""
+    if not path.endswith(".gz"):
+        raise ValueError("write_trace streams gzip artifacts; "
+                         "use Trace.save for plain JSON")
+    n = 0
+    with open(path, "wb") as f:
+        with gzip.GzipFile(fileobj=f, mode="wb", mtime=0, filename="") as gz:
+            w = gz.write
+            w(b'{"events":')
+            w(_dumpc([dataclasses.asdict(e) for e in events]).encode())
+            w(b',"format":%d,"incidents":' % TRACE_FORMAT)
+            w(_dumpc([dataclasses.asdict(i) for i in incidents]).encode())
+            w(b',"jobs":[')
+            for tj in jobs:
+                if n:
+                    w(b",")
+                w(_dumpc(dataclasses.asdict(tj)).encode())
+                n += 1
+            w(b'],"meta":')
+            # round-trip meta through JSON like Trace.to_dict (tuples -> lists)
+            w(_dumpc(json.loads(json.dumps(meta or {}))).encode())
+            w(b',"node_ages":')
+            w(_dumpc(dict(node_ages or {})).encode())
+            w(b"}")
+    return n
+
+
+@dataclass
+class TraceTail:
+    """Everything in a trace artifact *except* the job rows, plus the
+    aggregates a streamed replay needs up front (``read_tail``)."""
+    format: int
+    events: List[SimEvent]
+    incidents: List[Incident]
+    meta: Dict
+    node_ages: Dict[str, float]
+    n_jobs: int = 0
+    t_last_job: float = 0.0
+
+    def horizon(self, slack: float = 200000.0) -> float:
+        t_ev = max((e.time for e in self.events), default=0.0)
+        return max(self.t_last_job, t_ev) + slack
+
+
+class TraceReader:
+    """Pull-parser for trace artifacts: decodes the job array one row at a
+    time off the (gzip) byte stream, so peak memory is one row plus the
+    (small) events/incidents/meta/node_ages sections regardless of trace
+    size.  Key order inside the artifact is sorted (``events`` .. ``jobs``
+    .. ``node_ages``), so sections before ``jobs`` are available right
+    after construction; sections after it only once ``iter_jobs`` is
+    exhausted (``read_tail`` wraps the skim when only those are needed).
+
+    Accepts any artifact ``Trace.save`` / ``write_trace`` produced (compact
+    or indented, .gz or plain)."""
+
+    _CHUNK = 1 << 20
+
+    def __init__(self, path: str):
+        self._f: IO[str] = (gzip.open if path.endswith(".gz")
+                            else open)(path, "rt")
+        self._dec = json.JSONDecoder()
+        self._buf = ""
+        self._pos = 0
+        self._eof = False
+        self.header: Dict = {}       # sections seen before "jobs"
+        self.tail: Dict = {}         # sections after "jobs" (post-iteration)
+        self.n_jobs = 0
+        self.t_last_job = 0.0
+        self._expect("{")
+        self._in_jobs = False
+        self._done = False
+        self._parse_sections()
+        fmt = self.header.get("format")
+        if fmt not in _READ_FORMATS:
+            raise ValueError(f"unsupported trace format {fmt!r}")
+
+    # -- byte-stream plumbing ----------------------------------------------
+
+    def _fill(self) -> bool:
+        if self._eof:
+            return False
+        if self._pos > self._CHUNK:      # compact consumed prefix
+            self._buf = self._buf[self._pos:]
+            self._pos = 0
+        chunk = self._f.read(self._CHUNK)
+        if not chunk:
+            self._eof = True
+            return False
+        self._buf += chunk
+        return True
+
+    def _skip_ws(self) -> None:
+        while True:
+            while self._pos < len(self._buf) \
+                    and self._buf[self._pos] in " \t\n\r":
+                self._pos += 1
+            if self._pos < len(self._buf) or not self._fill():
+                return
+
+    def _peek(self) -> str:
+        self._skip_ws()
+        if self._pos >= len(self._buf):
+            raise ValueError("truncated trace artifact")
+        return self._buf[self._pos]
+
+    def _expect(self, ch: str) -> None:
+        got = self._peek()
+        if got != ch:
+            raise ValueError(f"malformed trace artifact: "
+                             f"expected {ch!r}, got {got!r}")
+        self._pos += 1
+
+    def _decode(self):
+        """One JSON value off the stream (refilling until it parses)."""
+        self._skip_ws()
+        while True:
+            try:
+                val, end = self._dec.raw_decode(self._buf, self._pos)
+            except json.JSONDecodeError:
+                # may just be truncated mid-value: pull more bytes first
+                if self._fill():
+                    continue
+                raise
+            # a value flush against the buffer end may still be a prefix of
+            # a longer one (e.g. a number split across chunks): refill once
+            # more before trusting it
+            if end == len(self._buf) and self._fill():
+                continue
+            self._pos = end
+            return val
+
+    # -- document structure -------------------------------------------------
+
+    def _parse_sections(self) -> None:
+        """Parse ``"key": value`` sections into header/tail, stopping at
+        the opening of the jobs array (pre-jobs) or the document end."""
+        store = self.tail if self._in_jobs else self.header
+        while True:
+            if self._peek() == "}":
+                self._pos += 1
+                self._done = True
+                return
+            key = self._decode()
+            self._expect(":")
+            if key == "jobs" and not self._in_jobs:
+                self._in_jobs = True
+                self._expect("[")
+                return
+            store[key] = self._decode()
+            if self._peek() == ",":
+                self._pos += 1
+
+    def iter_jobs(self) -> Iterator[TraceJob]:
+        """Yield rows; on exhaustion the post-jobs sections land in
+        ``tail`` and the underlying file is closed."""
+        if not self._in_jobs:
+            return
+        if self._peek() != "]":
+            while True:
+                d = self._decode()
+                self.n_jobs += 1
+                self.t_last_job = d.get("submit_time", 0.0)
+                yield TraceJob(**d)
+                if self._peek() == ",":
+                    self._pos += 1
+                else:
+                    break
+        self._expect("]")
+        if self._peek() == ",":
+            self._pos += 1
+        self._parse_sections()
+        self.close()
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self) -> "TraceReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_tail(path: str) -> TraceTail:
+    """Skim an artifact for everything but the job rows (constant memory:
+    rows are decoded and discarded).  A streamed install needs the node
+    ages, events and job count before replay starts, and they live *after*
+    the job array in the byte stream — this is the first pass of the
+    two-pass streamed replay."""
+    with TraceReader(path) as r:
+        for _ in r.iter_jobs():
+            pass
+        return TraceTail(
+            format=r.header.get("format", 0),
+            events=[SimEvent(**e) for e in r.header.get("events", [])],
+            incidents=[Incident(**i)
+                       for i in r.header.get("incidents", [])],
+            meta=r.tail.get("meta", {}),
+            node_ages=r.tail.get("node_ages", {}),
+            n_jobs=r.n_jobs, t_last_job=r.t_last_job)
+
+
+def install_stream(path: str, sim, compiler,
+                   tail: Optional[TraceTail] = None) -> TraceTail:
+    """Streamed replay of an artifact: apply node ages + injected events
+    from the (skimmed) tail, then attach the lazily-compiled job rows as
+    the sim's arrival source — ``ClusterSim.feed`` pulls them one at a
+    time during ``run``, so neither the row list, the compiled Job list
+    nor the full arrival heap ever materializes."""
+    if tail is None:
+        tail = read_tail(path)
+    _install_ops(sim, tail.events, tail.node_ages)
+    reader = TraceReader(path)
+    sim.feed(compile_jobs(reader.iter_jobs(), compiler))
+    return tail
+
+
+class StreamTrace:
+    """A synthesized-but-not-materialized trace: regenerates its job rows
+    from the config seed on every pass (`synthesize_stream`).  The ops
+    sections are recovered by replaying the rng stream once with the rows
+    discarded — :func:`_synth_jobs` draws exactly what :func:`synthesize`
+    draws, so ``save()`` here and ``synthesize(cfg).save()`` produce the
+    same bytes."""
+
+    def __init__(self, cfg: TraceConfig, nodes: Sequence[str] = ()):
+        self.cfg = cfg
+        self.nodes = list(nodes)
+        self.meta = {"config": dataclasses.asdict(cfg)}
+        self._ops: Optional[Tuple[List[SimEvent], List[Incident],
+                                  Dict[str, float]]] = None
+        self._t_last_job = 0.0
+
+    def iter_jobs(self) -> Iterator[TraceJob]:
+        return _synth_jobs(self.cfg, random.Random(self.cfg.seed))
+
+    def ops(self) -> Tuple[List[SimEvent], List[Incident], Dict[str, float]]:
+        """(events, incidents, node_ages) — computed once by running the
+        job draws to exhaustion (discarded) to position the rng stream."""
+        if self._ops is None:
+            rng = random.Random(self.cfg.seed)
+            for tj in _synth_jobs(self.cfg, rng):
+                self._t_last_job = tj.submit_time
+            self._ops = _synth_ops(self.cfg, rng, self.nodes)
+        return self._ops
+
+    def horizon(self, slack: float = 200000.0) -> float:
+        events, _, _ = self.ops()
+        t_ev = max((e.time for e in events), default=0.0)
+        return max(self._t_last_job, t_ev) + slack
+
+    def save(self, path: str) -> int:
+        events, incidents, node_ages = self.ops()
+        return write_trace(path, self.iter_jobs(), events=events,
+                           incidents=incidents, meta=self.meta,
+                           node_ages=node_ages)
+
+    def install(self, sim, compiler) -> None:
+        """Streamed install: ops applied eagerly, job rows attached as the
+        sim's lazy arrival source (see :func:`install_stream`)."""
+        events, _, node_ages = self.ops()
+        _install_ops(sim, events, node_ages)
+        sim.feed(compile_jobs(self.iter_jobs(), compiler))
+
+
+def synthesize_stream(cfg: TraceConfig,
+                      nodes: Sequence[str] = ()) -> StreamTrace:
+    """Streaming counterpart of :func:`synthesize`: same rng stream, same
+    rows, same artifact bytes — but nothing materialized until pulled."""
+    if (cfg.n_failures or cfg.n_stragglers or cfg.reliability) \
+            and not list(nodes):
+        raise ValueError("node ids are required to synthesize ops events")
+    return StreamTrace(cfg, nodes)

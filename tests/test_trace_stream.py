@@ -1,0 +1,270 @@
+"""Streaming trace layer + parallel bench runner.
+
+Covers the three promises the year-1M path rests on:
+
+- the streamed writer/synthesizer produces artifacts byte-identical to the
+  materialized ``synthesize``/``Trace.save`` path (the comparability
+  invariant committed trace artifacts depend on), and ``TraceReader`` /
+  ``read_tail`` recover exactly the rows and tail sections that went in;
+- replaying through ``ClusterSim.feed`` + ``install_stream`` (and the
+  compacted-metrics mode the year point runs with) matches the materialized
+  ``Trace.install`` replay — exactly for the default config, to float noise
+  for compaction, which sums in completion order;
+- the parallel bench merge is deterministic: per-(policy, seed) results
+  merge to the serial numbers regardless of worker completion order, and a
+  real 2-worker spawn-pool run writes a snapshot metric-identical to the
+  serial run of the same selection.
+
+The same parity assertions re-run against the committed month-50k artifact
+under ``-m slow`` (tier-1 keeps the fast synthetic configs only).
+"""
+import json
+import os
+import random
+import sys
+
+import pytest
+
+from repro.core import Cluster, ClusterSim, SimConfig, make_policy
+from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.data.trace import (ReliabilityConfig, Trace, TraceConfig,
+                              compile_jobs, horizon, install_stream,
+                              read_tail, synthesize, synthesize_stream,
+                              TraceReader)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+import bench_scheduler  # noqa: E402
+
+
+def mkcompiler(root):
+    return TaskCompiler(ArtifactStore(str(root / "cas")), str(root / "work"))
+
+
+def small_cluster():
+    return Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)   # 32 chips
+
+
+def plain_cfg(seed=0):
+    return TraceConfig(n_jobs=30, seed=seed, mean_gap_s=30.0,
+                       widths=(4, 4, 8, 8, 16), steps_min=40, steps_max=200,
+                       n_failures=2, n_stragglers=2,
+                       ops_start=100.0, ops_window=600.0,
+                       recover_s=(100.0, 200.0),
+                       slow_duration_s=(100.0, 200.0))
+
+
+def rel_cfg(seed=1):
+    return TraceConfig(n_jobs=24, seed=seed, mean_gap_s=40.0,
+                       widths=(4, 8), steps_min=40, steps_max=160,
+                       n_failures=0, n_stragglers=1,
+                       ops_start=100.0, ops_window=800.0,
+                       slow_duration_s=(100.0, 200.0),
+                       reliability=ReliabilityConfig(
+                           age_days=(30.0, 1460.0), weibull_shape=1.7,
+                           weibull_scale_days=20.0, transient_frac=0.7,
+                           repair_transient_s=(600.0, 0.6),
+                           repair_hard_s=(10800.0, 0.9)))
+
+
+def mixed_cfg(seed=2):
+    return TraceConfig(n_jobs=30, seed=seed, mean_gap_s=30.0,
+                       widths=(4, 8, 16), steps_min=40, steps_max=200,
+                       n_failures=1, n_stragglers=1,
+                       ops_start=100.0, ops_window=600.0,
+                       recover_s=(100.0, 200.0),
+                       slow_duration_s=(100.0, 200.0),
+                       interactive_frac=0.3, interactive_shared_frac=0.5,
+                       interactive_steps=(50, 200), spot_frac=0.1,
+                       mig_chips_per_host=1, shared_chips_per_host=1)
+
+
+ALL_CFGS = [plain_cfg, rel_cfg, mixed_cfg]
+
+
+# -- streamed writer / reader parity -----------------------------------------
+
+@pytest.mark.parametrize("mkcfg", ALL_CFGS)
+def test_streamed_save_byte_identical(tmp_path, mkcfg):
+    cfg = mkcfg()
+    nodes = list(small_cluster().nodes)
+    mat, st = tmp_path / "mat.json.gz", tmp_path / "st.json.gz"
+    synthesize(cfg, nodes).save(str(mat))
+    synthesize_stream(cfg, nodes).save(str(st))
+    assert mat.read_bytes() == st.read_bytes()
+
+
+def test_reader_round_trip(tmp_path):
+    cfg = plain_cfg()
+    nodes = list(small_cluster().nodes)
+    trace = synthesize(cfg, nodes)
+    path = str(tmp_path / "t.json.gz")
+    trace.save(path)
+
+    with TraceReader(path) as r:
+        rows = list(r.iter_jobs())
+    assert rows == trace.jobs
+    assert r.n_jobs == len(trace.jobs)
+
+    # the skim pass recovers every non-row section, typed
+    tail = read_tail(path)
+    assert tail.n_jobs == len(trace.jobs)
+    assert tail.meta == json.loads(json.dumps(trace.meta))
+    assert tail.node_ages == trace.node_ages
+    assert tail.events == trace.events
+    assert tail.incidents == trace.incidents
+    assert tail.t_last_job == max(j.submit_time for j in trace.jobs)
+    assert tail.horizon() == horizon(trace)
+
+
+def test_stream_iter_matches_materialized_rows():
+    cfg = rel_cfg()
+    nodes = list(small_cluster().nodes)
+    trace = synthesize(cfg, nodes)
+    st = synthesize_stream(cfg, nodes)
+    assert list(st.iter_jobs()) == trace.jobs
+    events, incidents, node_ages = st.ops()
+    assert events == trace.events
+    assert incidents == trace.incidents
+    assert node_ages == trace.node_ages
+    assert st.horizon() == horizon(trace)
+
+
+def test_compile_jobs_memoizes_templates(tmp_path):
+    cfg = plain_cfg()
+    trace = synthesize(cfg, list(small_cluster().nodes))
+    comp = mkcompiler(tmp_path)
+    lazy = list(compile_jobs(iter(trace.jobs), comp))
+    eager = trace.materialize(mkcompiler(tmp_path / "e"))
+    assert [j.id for j in lazy] == [j.id for j in eager]
+    assert [j.submit_time for j in lazy] == [j.submit_time for j in eager]
+    assert [j.plan.spec.resources for j in lazy] == \
+        [j.plan.spec.resources for j in eager]
+
+
+# -- replay parity: install vs feed vs compacted -----------------------------
+
+def run_installed(tmp_path, cfg, *, mode, policy="fair"):
+    """One simulation of ``cfg``'s trace; ``mode`` selects the attach path:
+    'install' (materialized), 'stream' (artifact + feed), or 'compact'
+    (artifact + feed + compacted metrics, the year-1M configuration)."""
+    nodes_cluster = small_cluster()
+    comp = mkcompiler(tmp_path / mode)
+    pol = make_policy(policy)
+    simcfg = SimConfig(tick=2.0, checkpoint_interval_s=60,
+                       checkpoint_cost_s=3, restart_cost_s=15)
+    if mode == "compact":
+        simcfg = SimConfig(tick=2.0, checkpoint_interval_s=60,
+                           checkpoint_cost_s=3, restart_cost_s=15,
+                           record_events=False, compact_completed=True)
+    sim = ClusterSim(nodes_cluster, pol, simcfg)
+    path = str(tmp_path / "trace.json.gz")
+    if mode == "install":
+        trace = synthesize(cfg, list(small_cluster().nodes))
+        trace.save(path)                      # artifact for the other modes
+        trace.install(sim, comp)
+        until = horizon(trace)
+    else:
+        tail = install_stream(path, sim, comp)
+        until = tail.horizon()
+    return sim.run(until=until)
+
+
+@pytest.mark.parametrize("mkcfg", [plain_cfg, rel_cfg])
+def test_feed_replay_matches_install(tmp_path, mkcfg):
+    cfg = mkcfg()
+    base = run_installed(tmp_path, cfg, mode="install")
+    feed = run_installed(tmp_path, cfg, mode="stream")
+    assert feed == base                       # dict ==, float-exact
+
+
+def test_compacted_metrics_match_to_float_noise(tmp_path):
+    cfg = plain_cfg()
+    base = run_installed(tmp_path, cfg, mode="install")
+    compact = run_installed(tmp_path, cfg, mode="compact")
+    assert set(compact) == set(base)
+    for k, v in base.items():
+        assert compact[k] == pytest.approx(v, rel=1e-9), k
+
+
+# -- deterministic merge + parallel smoke ------------------------------------
+
+def test_merge_seeds_matches_serial_math():
+    per_seed = [
+        {"avg_jct": 100.0, "completed": 60.0, "wall_s": 1.0,
+         "max_rss_mb": 100.0},
+        {"avg_jct": 250.0, "completed": 58.0, "wall_s": 2.0,
+         "max_rss_mb": 140.0},
+        {"avg_jct": 175.0, "completed": 59.0, "wall_s": 4.0,
+         "max_rss_mb": 120.0},
+    ]
+    merged = bench_scheduler.merge_seeds(per_seed)
+    # exactly the historical serial loop's accumulation, term by term
+    want_jct = 0.0
+    for m in per_seed:
+        want_jct += m["avg_jct"] / len(per_seed)
+    assert merged["avg_jct"] == want_jct
+    assert merged["wall_s"] == 7.0
+    assert merged["max_rss_mb"] == 140.0
+
+
+def test_merge_is_completion_order_independent():
+    """The parallel runner indexes worker results by (policy, seed) before
+    merging, so any completion order yields the same snapshot."""
+    rng = random.Random(7)
+    per_seed = [{"avg_jct": rng.uniform(50, 500),
+                 "completed": rng.uniform(40, 60),
+                 "wall_s": rng.uniform(0.5, 3.0),
+                 "max_rss_mb": rng.uniform(80, 200)} for _ in range(5)]
+    want = bench_scheduler.merge_seeds(per_seed)
+    # results arrive shuffled; re-indexing by seed restores serial order
+    arrived = list(enumerate(per_seed))
+    rng.shuffle(arrived)
+    by_seed = {seed: m for seed, m in arrived}
+    got = bench_scheduler.merge_seeds([by_seed[s]
+                                       for s in range(len(per_seed))])
+    assert got == want
+
+
+def _strip_machine_keys(obj):
+    if isinstance(obj, dict):
+        return {k: _strip_machine_keys(v) for k, v in obj.items()
+                if k not in ("wall_s", "max_rss_mb", "total_wall_s")}
+    return obj
+
+
+def test_parallel_run_matches_serial(tmp_path):
+    """End-to-end: a 2-worker spawn-pool bench run produces a snapshot
+    metric-identical to the serial run of the same selection."""
+    argv = ["--scale", "default", "--jobs", "25", "--seeds", "2",
+            "--policies", "fifo,fair", "--trace-dir", str(tmp_path)]
+    serial = bench_scheduler.main(argv + ["--out", ""])
+    par = bench_scheduler.main(argv + ["--out", "", "--workers", "2"])
+    assert _strip_machine_keys(par) == _strip_machine_keys(serial)
+
+
+# -- the committed month-50k artifact, full-size (nightly) -------------------
+
+@pytest.mark.slow
+def test_month_50k_feed_parity_with_committed_artifact(tmp_path):
+    """Replaying the committed month-50k artifact through the streaming
+    path (read_tail + install_stream + feed) must reproduce the
+    materialized Trace.install metrics exactly."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "benchmarks",
+                        "traces", "month-50k-seed0.json.gz")
+    trace = Trace.load(path)
+    cluster = Cluster(n_pods=2, hosts_per_pod=64, chips_per_host=4)
+    base_sim = ClusterSim(cluster, make_policy("fifo"), SimConfig(
+        tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
+        restart_cost_s=15))
+    trace.install(base_sim, mkcompiler(tmp_path / "a"))
+    base = base_sim.run(until=horizon(trace))
+
+    feed_sim = ClusterSim(Cluster(n_pods=2, hosts_per_pod=64,
+                                  chips_per_host=4),
+                          make_policy("fifo"), SimConfig(
+        tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
+        restart_cost_s=15))
+    tail = install_stream(path, feed_sim, mkcompiler(tmp_path / "b"))
+    feed = feed_sim.run(until=tail.horizon())
+    assert feed == base
