@@ -1,0 +1,16 @@
+"""repro.analysis — the repo-specific invariant linter ("repolint").
+
+Turns the ROADMAP's standing constraints into machine-checked AST rules
+with inline suppressions and a committed violation baseline.  See
+``python -m repro.analysis --help`` and CONTRIBUTING.md.
+"""
+from repro.analysis.framework import (RULES, Report, Rule, Violation,
+                                      analyze, apply_baseline, check_source,
+                                      find_suppressions, load_baseline,
+                                      make_baseline, register,
+                                      save_baseline)
+from repro.analysis import rules as _rules  # registers the rule set
+
+__all__ = ["RULES", "Report", "Rule", "Violation", "analyze",
+           "apply_baseline", "check_source", "find_suppressions",
+           "load_baseline", "make_baseline", "register", "save_baseline"]

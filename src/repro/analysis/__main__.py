@@ -1,0 +1,150 @@
+"""CLI for the repo invariant linter.
+
+Mirrors ``benchmarks/check_bench.py``'s contract so CI wires both the same
+way: exit 0 when the tree is clean (everything fixed, suppressed, or
+baselined), 1 on new violations, 2 when the committed baseline is missing
+or unreadable.  ``--json`` emits one machine-readable object on stdout so
+a CI step can annotate each finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis import (RULES, analyze, apply_baseline, load_baseline,
+                            make_baseline, save_baseline)
+from repro.analysis.framework import BASELINE_NAME
+
+EXIT_OK = 0
+EXIT_VIOLATIONS = 1
+EXIT_MISSING_BASELINE = 2
+
+
+def _default_root() -> str:
+    """The repo root: nearest ancestor of this file holding pyproject.toml,
+    falling back to the current directory."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    d = here
+    for _ in range(8):
+        if os.path.exists(os.path.join(d, "pyproject.toml")):
+            return d
+        d = os.path.dirname(d)
+    return os.getcwd()
+
+
+def _epilog() -> str:
+    lines = ["rules:"]
+    for name, rule in sorted(RULES.items()):
+        lines.append(f"  {name:16s} {rule.description}")
+    lines += [
+        "",
+        "suppressing one finding:",
+        "  trailing `# repolint: disable=<rule>[,<rule>]` on the line (or a",
+        "  comment-only line directly above it) silences that site; prefer",
+        "  a short justification in the same comment.",
+        "",
+        "baseline:",
+        f"  {BASELINE_NAME} (committed, repo root) grandfathers pre-existing",
+        "  violations by (path, rule) count. New findings above a baselined",
+        "  count fail the gate; refresh with --write-baseline only when a",
+        "  finding is genuinely out of scope to fix.",
+        "",
+        "exit codes: 0 clean / 1 new violations / 2 baseline missing",
+        "(same contract as benchmarks/check_bench.py).",
+    ]
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=__doc__.splitlines()[0],
+        epilog=_epilog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*",
+                    help="repo-relative files to lint (default: src/, "
+                         "benchmarks/, tests/)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected from the "
+                         "installed package, else cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline path (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="lint raw: ignore the baseline entirely "
+                         "(exit 0/1 only)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable result object on stdout")
+    ap.add_argument("--rule", action="append", default=None,
+                    help="run only this rule (repeatable)")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root) if args.root else _default_root()
+    baseline_path = args.baseline or os.path.join(root, BASELINE_NAME)
+
+    rules = None
+    if args.rule:
+        unknown = sorted(set(args.rule) - set(RULES))
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(unknown)} "
+                     f"(see --help for the registry)")
+        rules = [RULES[r] for r in args.rule]
+
+    report = analyze(root, paths=args.paths or None, rules=rules)
+    result = {
+        "root": root,
+        "files_scanned": report.files_scanned,
+        "rules": sorted(r.name for r in (rules or RULES.values())),
+        "grandfathered": 0,
+        "violations": [],
+    }
+
+    if args.write_baseline:
+        save_baseline(baseline_path, make_baseline(report.violations))
+        result.update(status="baseline-written", baseline=baseline_path,
+                      baselined=len(report.violations))
+        _emit(args.json, result)
+        return EXIT_OK
+
+    fresh = report.violations
+    if not args.no_baseline:
+        try:
+            baseline = load_baseline(baseline_path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            result.update(status="missing-baseline",
+                          detail=f"baseline {baseline_path}: {e}")
+            _emit(args.json, result)
+            return EXIT_MISSING_BASELINE
+        fresh, grandfathered = apply_baseline(report.violations, baseline)
+        result["grandfathered"] = grandfathered
+
+    result["violations"] = [v.render() for v in fresh]
+    result["status"] = "violations" if fresh else "ok"
+    _emit(args.json, result)
+    return EXIT_VIOLATIONS if fresh else EXIT_OK
+
+
+def _emit(as_json: bool, result: dict) -> None:
+    if as_json:
+        print(json.dumps(result, indent=1, sort_keys=True))
+        return
+    for v in result.get("violations", []):
+        print(f"FAIL {v}")
+    status = result.get("status")
+    if status == "missing-baseline":
+        print(f"MISSING {result['detail']}")
+    elif status == "baseline-written":
+        print(f"baseline written: {result['baseline']} "
+              f"({result['baselined']} finding(s) grandfathered)")
+    elif status == "ok":
+        print(f"ok: {result['files_scanned']} file(s) clean "
+              f"({result['grandfathered']} baselined)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

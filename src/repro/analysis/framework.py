@@ -1,0 +1,257 @@
+"""AST-walker framework for the repo-specific invariant linter (repolint).
+
+The ROADMAP's "Standing constraints" are load-bearing conventions —
+compat-only jax imports, Fraction-only fractional chips, env writes confined
+to ``repro/runtime.py``, driver-hook discipline, deterministic iteration in
+``core/`` — that historically lived as prose and reviewer memory.  This
+package turns each one into an AST rule so the constraint survives team
+turnover the way the paper's platform checks do (SING encodes operational
+rules as automated gates, not vigilance).
+
+Three layers:
+
+- :class:`Rule` — one invariant.  A rule declares the path prefixes it
+  applies to (``include`` / ``exclude`` on posix repo-relative paths) and
+  implements ``check(tree, path)`` over a parsed module.
+- suppressions — ``# repolint: disable=<rule>[,<rule>...]`` on the offending
+  line (or on a comment-only line directly above it) silences a finding at
+  exactly that site; ``disable=all`` silences every rule for the line.
+  Suppressions are for *intentional* exceptions that deserve an in-code
+  justification; mass exceptions belong in a rule's allowlist instead.
+- baseline — a committed ``repolint_baseline.json`` grandfathers
+  pre-existing violations by ``(path, rule)`` count, so the gate can land
+  green on an imperfect tree and then ratchet: new findings above the
+  baselined count fail, and fixing a finding without refreshing the
+  baseline keeps passing (counts are upper bounds).
+
+``python -m repro.analysis`` wires this into a CI-friendly CLI with
+``check_bench``-style exit codes (0 ok / 1 violations / 2 baseline missing).
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# scanned by default, relative to the repo root
+DEFAULT_SUBDIRS = ("src", "benchmarks", "tests")
+BASELINE_NAME = "repolint_baseline.json"
+BASELINE_VERSION = 1
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str          # posix path relative to the repo root
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def baseline_key(self) -> str:
+        # deliberately line-free: baselines must survive unrelated edits
+        # shifting code up and down a file
+        return f"{self.path}::{self.rule}"
+
+
+class Rule:
+    """One invariant.  Subclasses set ``name``/``description``/``include``
+    (path prefixes the rule applies to) and implement :meth:`check`."""
+
+    name: str = ""
+    description: str = ""
+    include: Tuple[str, ...] = ("src/",)
+    exclude: Tuple[str, ...] = ()
+
+    def applies_to(self, path: str) -> bool:
+        if not any(path.startswith(p) for p in self.include):
+            return False
+        return not any(path.startswith(p) for p in self.exclude)
+
+    def check(self, tree: ast.Module, path: str) -> List["Violation"]:
+        raise NotImplementedError
+
+    def violation(self, path: str, node: ast.AST, message: str) -> Violation:
+        return Violation(self.name, path, getattr(node, "lineno", 0), message)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate the rule and add it to the registry."""
+    rule = cls()
+    if not rule.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if rule.name in RULES:
+        raise ValueError(f"duplicate rule name {rule.name!r}")
+    RULES[rule.name] = rule
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repolint:\s*disable=([A-Za-z0-9_-]+(?:\s*,\s*[A-Za-z0-9_-]+)*)")
+
+
+def find_suppressions(source: str) -> Dict[int, Set[str]]:
+    """Map line number -> set of rule names silenced on that line.
+
+    A comment-only line extends its suppression to the next line, so a
+    justification can sit above a long statement instead of trailing it.
+    """
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+        out.setdefault(i, set()).update(names)
+        if text.lstrip().startswith("#"):
+            out.setdefault(i + 1, set()).update(names)
+    return out
+
+
+def is_suppressed(v: Violation, suppressions: Dict[int, Set[str]]) -> bool:
+    names = suppressions.get(v.line, ())
+    return "all" in names or v.rule in names
+
+
+# ---------------------------------------------------------------------------
+# Walking + per-file dispatch
+# ---------------------------------------------------------------------------
+
+def iter_py_files(root: str,
+                  subdirs: Sequence[str] = DEFAULT_SUBDIRS) -> List[str]:
+    """Posix-relative paths of every .py file under root's scanned subdirs."""
+    found: List[str] = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                    found.append(rel.replace(os.sep, "/"))
+    return found
+
+
+def check_source(source: str, path: str,
+                 rules: Optional[Iterable[Rule]] = None,
+                 respect_suppressions: bool = True) -> List[Violation]:
+    """Run every applicable rule over one module's source text.
+
+    ``path`` is the posix repo-relative path the rules scope on; fixture
+    tests lint synthetic snippets by passing a pretend path.
+    """
+    rules = list(RULES.values()) if rules is None else list(rules)
+    applicable = [r for r in rules if r.applies_to(path)]
+    if not applicable:
+        return []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Violation("parse-error", path, e.lineno or 0,
+                          f"could not parse: {e.msg}")]
+    out: List[Violation] = []
+    for rule in applicable:
+        out.extend(rule.check(tree, path))
+    if respect_suppressions:
+        sup = find_suppressions(source)
+        out = [v for v in out if not is_suppressed(v, sup)]
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+@dataclass
+class Report:
+    violations: List[Violation]
+    files_scanned: int
+    grandfathered: int = 0
+
+    def to_dict(self) -> Dict:
+        return {
+            "violations": [v.render() for v in self.violations],
+            "files_scanned": self.files_scanned,
+            "grandfathered": self.grandfathered,
+        }
+
+
+def analyze(root: str, paths: Optional[Sequence[str]] = None,
+            rules: Optional[Iterable[Rule]] = None) -> Report:
+    """Lint ``paths`` (repo-relative; default: every scanned subdir)."""
+    # rules are registered on import; keep the import local so the framework
+    # stays importable without the rule set (fixture tests build their own)
+    from repro.analysis import rules as _rules  # noqa: F401
+    rels = list(paths) if paths is not None else iter_py_files(root)
+    violations: List[Violation] = []
+    n = 0
+    for rel in rels:
+        full = os.path.join(root, rel.replace("/", os.sep))
+        try:
+            with open(full, encoding="utf-8") as f:
+                source = f.read()
+        except OSError as e:
+            violations.append(Violation("read-error", rel, 0, str(e)))
+            continue
+        n += 1
+        violations.extend(check_source(source, rel, rules=rules))
+    return Report(sorted(violations, key=lambda v: (v.path, v.line, v.rule)),
+                  files_scanned=n)
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def make_baseline(violations: Sequence[Violation]) -> Dict:
+    counts: Dict[str, int] = {}
+    for v in violations:
+        counts[v.baseline_key()] = counts.get(v.baseline_key(), 0) + 1
+    return {"version": BASELINE_VERSION,
+            "entries": dict(sorted(counts.items()))}
+
+
+def load_baseline(path: str) -> Dict:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data.get("entries"), dict):
+        raise ValueError(f"{path}: no 'entries' object")
+    return data
+
+
+def save_baseline(path: str, baseline: Dict) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(baseline, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def apply_baseline(violations: Sequence[Violation],
+                   baseline: Dict) -> Tuple[List[Violation], int]:
+    """Split violations into (new, n_grandfathered).
+
+    For each ``path::rule`` key the first N findings (file order) are
+    grandfathered, N = the baselined count — an upper bound, so fixing some
+    of a file's findings never turns the remainder into failures.
+    """
+    budget = dict(baseline.get("entries", {}))
+    fresh: List[Violation] = []
+    grandfathered = 0
+    for v in violations:
+        k = v.baseline_key()
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+            grandfathered += 1
+        else:
+            fresh.append(v)
+    return fresh, grandfathered

@@ -11,6 +11,15 @@ both without scattering version checks through models/parallel/launch.
 from __future__ import annotations
 
 import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Stable sharding types, re-exported so sharding code has a single import
+# surface (the compat-drift analysis rule pins this): these names exist
+# unchanged in 0.4.x and 0.6+, while the functions below need real bridging.
+P = PartitionSpec
+
+__all__ = ["Mesh", "NamedSharding", "PartitionSpec", "P", "make_mesh",
+           "set_mesh", "get_abstract_mesh", "cost_analysis", "shard_map"]
 
 
 def make_mesh(shape, axes):

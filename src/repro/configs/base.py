@@ -8,8 +8,7 @@ HLO small enough to SPMD-compile 126-layer models on one host.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 

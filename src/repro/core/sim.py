@@ -382,7 +382,7 @@ class ClusterSim:
         if not self.cluster.abnormal_nodes:
             return False
         cand: set = set()
-        for nid in self.cluster.abnormal_nodes:
+        for nid in sorted(self.cluster.abnormal_nodes):
             cand.update(self.cluster.jobs_on_node(nid))
         hit = False
         for jid in sorted(cand):

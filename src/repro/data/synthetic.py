@@ -14,7 +14,7 @@ token stream through a fixed random projection, so the mapping is learnable).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

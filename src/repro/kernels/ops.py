@@ -10,7 +10,6 @@ from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_tpu

@@ -1,11 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count on first init). REPRO_DRYRUN_DEVICES overrides for CI tiny meshes.
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
-                               + os.environ["REPRO_DRYRUN_DEVICES"])
-
 """Multi-pod dry-run: ``lower().compile()`` every (architecture x input-shape
 x mesh) cell, record memory analysis, cost analysis and the collective
 schedule. No arrays are ever allocated (ShapeDtypeStruct + eval_shape only).
@@ -19,6 +11,16 @@ Usage:
 by the roofline extrapolation (lax.scan bodies are counted once by
 cost_analysis; benchmarks/roofline.py solves f(M,L)=A+M*(B+L*C) from these).
 """
+import os
+
+from repro import runtime
+
+# Must run before the first jax import (jax locks the device count on first
+# init): 512 virtual host devices so production meshes lower on one CPU.
+# REPRO_DRYRUN_DEVICES overrides for CI tiny meshes.
+runtime.force_host_device_count(
+    int(os.environ.get("REPRO_DRYRUN_DEVICES") or 512))
+
 import argparse
 import dataclasses
 import json
@@ -26,13 +28,13 @@ import re
 import time
 import traceback
 from collections import defaultdict
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.compat import NamedSharding, P
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
 from repro.data.synthetic import input_specs

@@ -4,6 +4,12 @@ stream through the continuous-batching engine.
   PYTHONPATH=src python -m repro.launch.serve --arch tacc-100m --smoke \
       --requests 8
 """
+from repro import runtime
+
+# before the first jax import: device count / platform / XLA flags lock in
+# at backend init
+runtime.init_from_env()
+
 import argparse
 import time
 

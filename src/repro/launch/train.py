@@ -3,31 +3,26 @@
 On a real TPU fleet each host runs this under its own process with
 ``jax.distributed.initialize()``; on this harness it runs the same code on
 the local device (or a forced-device tiny mesh via REPRO_DRYRUN_DEVICES).
-XLA collective-overlap flags for v5e are applied unless already set.
+Platform knobs (v5e collective-overlap XLA flags, REPRO_PLATFORM /
+REPRO_X64 / REPRO_HOST_DEVICES) come from ``repro.runtime``.
 
   PYTHONPATH=src python -m repro.launch.train --arch tacc-100m --smoke \
       --steps 100 --global-batch 8 --seq-len 64 --ckpt-dir /tmp/run1
 """
-import os
+from repro import runtime
 
-_XLA_PERF_FLAGS = (
-    "--xla_tpu_enable_data_parallel_all_reduce_opt=true "
-    "--xla_tpu_data_parallel_opt_different_sized_ops=true "
-    "--xla_tpu_enable_async_collective_fusion=true "
-    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true "
-    "--xla_tpu_overlap_compute_collective_tc=true "
-)
-if "TPU_NAME" in os.environ and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = _XLA_PERF_FLAGS
+# before the first jax import: device count / platform / XLA flags lock in
+# at backend init
+runtime.init_from_env()
 
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.compat import NamedSharding, P
 from repro.ckpt import Checkpointer, latest_step
 from repro.configs import get_config
 from repro.data import SyntheticLM
@@ -35,7 +30,6 @@ from repro.models import model_defs, param_shardings
 from repro.models.transformer import RunFlags
 from repro.train import (OptConfig, TrainConfig, build_train_step,
                          init_train_state)
-from repro.train.step import batch_shardings
 
 
 def main() -> None:

@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.params import ParamDef
-from repro.models.layers import apply_rope, apply_norm
-from repro.models.attention import flash_attention_xla, NEG_INF
+from repro.models.layers import apply_rope
+from repro.models.attention import flash_attention_xla
 
 
 def mla_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:

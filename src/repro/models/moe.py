@@ -17,13 +17,13 @@ Aux outputs: switch-style load-balance loss and router z-loss.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.compat import P
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.params import ParamDef
 from repro.models.layers import ffn_defs, apply_ffn

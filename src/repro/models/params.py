@@ -16,15 +16,14 @@ keeps e.g. GQA KV-head projections valid when n_kv_heads < |model|.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
+
+from repro.compat import Mesh, NamedSharding, P
 
 AxisName = Union[str, Tuple[str, ...], None]
 
@@ -97,7 +96,7 @@ def logical_to_spec(axes: Sequence[Optional[str]], rules: Mapping[str, AxisName]
     return P(*out)
 
 
-def param_specs(defs: Any, mesh: jax.sharding.Mesh,
+def param_specs(defs: Any, mesh: Mesh,
                 rules: Optional[Mapping[str, AxisName]] = None) -> Any:
     rules = DEFAULT_RULES if rules is None else rules
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -108,10 +107,10 @@ def param_specs(defs: Any, mesh: jax.sharding.Mesh,
     return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
 
 
-def param_shardings(defs: Any, mesh: jax.sharding.Mesh,
+def param_shardings(defs: Any, mesh: Mesh,
                     rules: Optional[Mapping[str, AxisName]] = None) -> Any:
     specs = param_specs(defs, mesh, rules)
-    return jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
 
 

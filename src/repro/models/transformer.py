@@ -9,13 +9,11 @@ in seconds at 512 devices).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models.params import ParamDef

@@ -14,14 +14,13 @@ and reduce over ICI.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.compat import P
 
 NEG_INF = -1e30
 

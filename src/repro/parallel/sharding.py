@@ -15,12 +15,11 @@ Decode layout (TPU flash-decoding):
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import NamedSharding, P
 from repro.configs.base import LayerSpec, ModelConfig, ShapeConfig
 
 

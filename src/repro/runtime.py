@@ -44,21 +44,81 @@ def _merge_xla_flag(flags: str, flag: str) -> str:
     return " ".join(kept + [flag])
 
 
-def set_cpu_device_count(n: int, env: Optional[Dict[str, str]] = None) -> int:
-    """Expose ``n`` XLA host-platform devices (the
-    ``--xla_force_host_platform_device_count`` flag).  Only effective
-    before JAX initializes its backends; mutates ``os.environ`` unless an
-    explicit ``env`` dict is given.  Returns the count actually set
-    (clamped to the host's cores)."""
-    total = cpu_count()
-    if n > total:
-        warnings.warn(f"only {total} CPUs available; using {total}", Warning)
-        n = total
+def force_host_device_count(n: int,
+                            env: Optional[Dict[str, str]] = None) -> int:
+    """Expose ``n`` XLA host-platform devices, however many physical cores
+    exist (they are *virtual* devices — the dry-run forces 512 to lower
+    production meshes on a laptop).  Only effective before JAX initializes
+    its backends; mutates ``os.environ`` unless an explicit ``env`` dict is
+    given.  Returns the count set."""
     tgt = os.environ if env is None else env
     tgt["XLA_FLAGS"] = _merge_xla_flag(
         tgt.get("XLA_FLAGS", ""),
         f"--xla_force_host_platform_device_count={int(n)}")
-    return n
+    return int(n)
+
+
+def set_cpu_device_count(n: int, env: Optional[Dict[str, str]] = None) -> int:
+    """Expose ``n`` XLA host-platform devices for *compute* workers, clamped
+    to the host's cores (one device per core — oversubscription is the
+    dry-run's business, see :func:`force_host_device_count`)."""
+    total = cpu_count()
+    if n > total:
+        warnings.warn(f"only {total} CPUs available; using {total}", Warning)
+        n = total
+    return force_host_device_count(n, env)
+
+
+def ensure_platform_env(platform: str = "cpu",
+                        env: Optional[Dict[str, str]] = None) -> None:
+    """Default ``JAX_PLATFORMS`` before jax initializes.  A setdefault: an
+    explicit user/CI choice always wins (the test suite pins ``cpu`` so
+    collection never trips over a half-configured accelerator)."""
+    tgt = os.environ if env is None else env
+    tgt.setdefault("JAX_PLATFORMS", platform)
+
+
+# v5e collective-overlap flag set (async collective fusion + compute/ICI
+# overlap): the standard fleet-training XLA tuning, applied on TPU hosts
+# that have not hand-tuned XLA_FLAGS themselves
+_TPU_PERF_FLAGS = (
+    "--xla_tpu_enable_data_parallel_all_reduce_opt=true",
+    "--xla_tpu_data_parallel_opt_different_sized_ops=true",
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+)
+
+
+def apply_tpu_perf_flags(env: Optional[Dict[str, str]] = None) -> bool:
+    """Apply the v5e collective-overlap flags on a TPU fleet host
+    (``TPU_NAME`` set) unless ``XLA_FLAGS`` was already hand-tuned.
+    Returns True when the flags were applied."""
+    tgt = os.environ if env is None else env
+    if "TPU_NAME" not in tgt or "XLA_FLAGS" in tgt:
+        return False
+    flags = ""
+    for f in _TPU_PERF_FLAGS:
+        flags = _merge_xla_flag(flags, f)
+    tgt["XLA_FLAGS"] = flags
+    return True
+
+
+def init_from_env() -> None:
+    """Entrypoint hook for ``launch/`` mains: apply the env-driven platform
+    knobs (``REPRO_HOST_DEVICES``, ``REPRO_PLATFORM``, ``REPRO_X64``) plus
+    the TPU perf flags.  Must run before the first jax computation; pure
+    env-var work happens first so the jax-touching knobs see it."""
+    n = os.environ.get("REPRO_HOST_DEVICES")
+    if n:
+        force_host_device_count(int(n))
+    apply_tpu_perf_flags()
+    platform = os.environ.get("REPRO_PLATFORM")
+    if platform:
+        set_platform(platform)
+    x64 = os.environ.get("REPRO_X64")
+    if x64 is not None:
+        enable_x64(x64.lower() not in ("", "0", "false"))
 
 
 def set_platform(platform: str = "cpu") -> None:

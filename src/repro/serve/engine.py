@@ -11,9 +11,8 @@ inference tasks.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +56,7 @@ class ServeEngine:
         self.cache = init_cache(cfg, max_batch, max_seq)
         self._rng = np.random.RandomState(seed)
         self._prefill1 = jax.jit(
-            lambda p, b, l: prefill(cfg, p, b, l, flags=flags))
+            lambda p, b, n: prefill(cfg, p, b, n, flags=flags))
         self._decode = jax.jit(
             lambda p, c, t: decode_step(cfg, p, c, t, flags=flags))
         self._steps = 0

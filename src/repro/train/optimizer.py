@@ -4,7 +4,6 @@ global-norm clipping, warmup+cosine schedule, configurable moment dtypes
 EXPERIMENTS.md §Roofline memory notes)."""
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Dict, Tuple
 

@@ -8,14 +8,13 @@ the standard 'gradient compression' lever on TPU — see DESIGN.md §7).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro.compat import NamedSharding, P
 from repro.configs.base import ModelConfig
 from repro.models import model_defs, init_params
 from repro.models.transformer import RunFlags, train_logits
@@ -122,7 +121,7 @@ def state_shardings(cfg: ModelConfig, mesh, rules=None):
     from repro.models import param_shardings
     defs = model_defs(cfg)
     pshard = param_shardings(defs, mesh, rules)
-    scalar = jax.sharding.NamedSharding(mesh, P())
+    scalar = NamedSharding(mesh, P())
     return {"params": pshard,
             "opt": {"m": pshard, "v": pshard, "step": scalar}}
 
@@ -133,8 +132,7 @@ def batch_shardings(mesh, batch_axes=("data",), batch_example=None):
 
     def one(x):
         nd = len(x.shape)
-        return jax.sharding.NamedSharding(
-            mesh, P(*([lead] + [None] * (nd - 1))))
+        return NamedSharding(mesh, P(*([lead] + [None] * (nd - 1))))
 
     if batch_example is None:
         return lambda tree: jax.tree.map(one, tree)

@@ -3,6 +3,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro import runtime
+
 # Tests run on the single real CPU device; only the explicitly-marked
 # subprocess tests fork with --xla_force_host_platform_device_count.
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
+runtime.ensure_platform_env("cpu")

@@ -6,8 +6,11 @@ Exits nonzero on failure. Invoked by tests/test_distributed.py.
 import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import runtime
+
+runtime.force_host_device_count(8)
 
 import jax
 import jax.numpy as jnp
@@ -230,7 +233,9 @@ def check_distributed_train_step_parity():
 
 
 def check_tiny_dryrun():
-    os.environ["REPRO_DRYRUN_DEVICES"] = "8"
+    # subprocess-local knob read once by repro.launch.dryrun at import; the
+    # runtime helpers don't cover per-entrypoint overrides
+    os.environ["REPRO_DRYRUN_DEVICES"] = "8"  # repolint: disable=env-discipline
     from repro.launch.dryrun import run_cell
     for arch, shape in (("internlm2-1.8b", "train_4k"),
                         ("qwen2-moe-a2.7b", "decode_32k")):

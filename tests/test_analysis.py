@@ -1,0 +1,434 @@
+"""Tier-1 coverage for the repolint invariant linter (repro.analysis).
+
+Each rule gets fixture positives *and* negatives (linted as synthetic
+snippets through ``check_source`` with a pretend repo path), plus the
+suppression grammar, the baseline round-trip, and the CLI's
+``check_bench``-style exit-code contract (0 ok / 1 violations / 2 baseline
+missing).
+"""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import (RULES, analyze, apply_baseline, check_source,
+                            find_suppressions, load_baseline, make_baseline,
+                            save_baseline)
+from repro.analysis.__main__ import (EXIT_MISSING_BASELINE, EXIT_OK,
+                                     EXIT_VIOLATIONS, main)
+
+
+def lint(source, path, rule=None):
+    rules = [RULES[rule]] if rule else None
+    return check_source(textwrap.dedent(source), path, rules=rules)
+
+
+def names(violations):
+    return [v.rule for v in violations]
+
+
+# ---------------------------------------------------------------------------
+# compat-drift
+# ---------------------------------------------------------------------------
+
+def test_compat_drift_flags_raw_sharding_imports():
+    out = lint("from jax.sharding import NamedSharding, PartitionSpec as P\n",
+               "src/repro/parallel/new.py", rule="compat-drift")
+    assert names(out) == ["compat-drift"] and "repro.compat" in out[0].message
+    out = lint("from jax import sharding\n",
+               "src/repro/parallel/new.py", rule="compat-drift")
+    assert names(out) == ["compat-drift"]
+    out = lint("import jax.sharding\n",
+               "src/repro/parallel/new.py", rule="compat-drift")
+    assert names(out) == ["compat-drift"]
+
+
+def test_compat_drift_flags_bridged_attribute_chains_once():
+    # one finding for the full chain — not one more per nested Attribute
+    out = lint("import jax\ns = jax.sharding.NamedSharding(mesh, spec)\n",
+               "src/repro/models/new.py", rule="compat-drift")
+    assert names(out) == ["compat-drift"]
+    out = lint("import jax\njax.set_mesh(mesh)\n",
+               "src/repro/train/new.py", rule="compat-drift")
+    assert len(out) == 1 and "compat.set_mesh" in out[0].message
+
+
+def test_compat_drift_flags_raw_cost_analysis():
+    out = lint("c = lowered.compile()\nstats = c.cost_analysis()\n",
+               "src/repro/launch/new.py", rule="compat-drift")
+    assert names(out) == ["compat-drift"]
+    # the bridge itself is the one allowed caller
+    out = lint("stats = compat.cost_analysis(compiled)\n",
+               "src/repro/launch/new.py", rule="compat-drift")
+    assert out == []
+
+
+def test_compat_drift_negatives():
+    ok = """\
+    from repro.compat import Mesh, NamedSharding, P
+    from repro import compat
+    with compat.set_mesh(mesh):
+        pass
+    """
+    assert lint(ok, "src/repro/parallel/new.py", rule="compat-drift") == []
+    # scoped to src/repro/: test helpers may import raw jax for assertions
+    raw = "from jax.sharding import NamedSharding\n"
+    assert lint(raw, "tests/helper.py", rule="compat-drift") == []
+    assert lint(raw, "src/repro/compat.py", rule="compat-drift") == []
+
+
+def test_compat_drift_pallas_allowlist_is_kernels_only():
+    src = "from jax.experimental import pallas as pl\n"
+    assert lint(src, "src/repro/kernels/new.py", rule="compat-drift") == []
+    src2 = "from jax.experimental.pallas import tpu as pltpu\n"
+    assert lint(src2, "src/repro/kernels/new.py", rule="compat-drift") == []
+    # outside kernels/ the same import is drift
+    assert names(lint(src, "src/repro/models/new.py",
+                      rule="compat-drift")) == ["compat-drift"]
+    # and non-pallas experimental imports are drift even inside kernels/
+    src3 = "from jax.experimental import mesh_utils\n"
+    assert names(lint(src3, "src/repro/kernels/new.py",
+                      rule="compat-drift")) == ["compat-drift"]
+
+
+# ---------------------------------------------------------------------------
+# env-discipline
+# ---------------------------------------------------------------------------
+
+def test_env_discipline_flags_mutation():
+    bad = """\
+    import os
+    os.environ["XLA_FLAGS"] = "--foo"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    del os.environ["REPRO_X64"]
+    os.environ.pop("TPU_NAME", None)
+    os.putenv("A", "b")
+    """
+    out = lint(bad, "src/repro/launch/new.py", rule="env-discipline")
+    assert names(out) == ["env-discipline"] * 5
+    assert [v.line for v in out] == [2, 3, 4, 5, 6]
+
+
+def test_env_discipline_negatives():
+    ok = """\
+    import os
+    x = os.environ.get("REPRO_PLATFORM")
+    y = os.environ["HOME"]
+    if "TPU_NAME" in os.environ:
+        pass
+    env = dict(os.environ)
+    """
+    assert lint(ok, "src/repro/launch/new.py", rule="env-discipline") == []
+    # runtime.py is the owning module
+    bad = "import os\nos.environ['XLA_FLAGS'] = 'x'\n"
+    assert lint(bad, "src/repro/runtime.py", rule="env-discipline") == []
+    # tests are in scope (conftest/env hygiene)
+    assert names(lint(bad, "tests/conftest.py",
+                      rule="env-discipline")) == ["env-discipline"]
+
+
+# ---------------------------------------------------------------------------
+# fraction-safety
+# ---------------------------------------------------------------------------
+
+def test_fraction_safety_flags_floaty_flows():
+    bad = """\
+    sched.grant_delta(tenant, chips * 0.5)
+    cluster.alloc(job, chips=n / 2)
+    job.chips = 1.5
+    self._tenant_used[t] = used + float(x)
+    """
+    out = lint(bad, "src/repro/core/new.py", rule="fraction-safety")
+    assert names(out) == ["fraction-safety"] * 4
+
+
+def test_fraction_safety_negatives():
+    ok = """\
+    from fractions import Fraction
+    sched.grant_delta(tenant, 4)
+    cluster.alloc(job, chips=Fraction(1, 2))
+    job.chips = n // 2
+    self._tenant_used[t] = used + Fraction("1/4")
+    ratio = done / total   # floats fine outside the guarded sinks
+    """
+    assert lint(ok, "src/repro/core/new.py", rule="fraction-safety") == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_determinism_flags_wall_clock_and_unseeded_rng():
+    bad = """\
+    import random, time
+    t = time.time()
+    x = random.random()
+    """
+    out = lint(bad, "src/repro/core/new.py", rule="determinism")
+    assert names(out) == ["determinism"] * 2
+    # only core/ is in scope, and the live drivers are exempt by design
+    assert lint(bad, "src/repro/data/new.py", rule="determinism") == []
+    assert lint(bad, "src/repro/core/service.py", rule="determinism") == []
+
+
+def test_determinism_flags_set_iteration_order():
+    bad = """\
+    for nid in self.cluster.abnormal_nodes:
+        handle(nid)
+    ids = list({j.id for j in jobs})
+    ys = [f(x) for x in set(xs)]
+    """
+    out = lint(bad, "src/repro/core/new.py", rule="determinism")
+    assert len(out) == 3
+    ok = """\
+    import random
+    rng = random.Random(seed)
+    for nid in sorted(self.cluster.abnormal_nodes):
+        handle(nid)
+    ids = sorted({j.id for j in jobs})
+    for k in mapping:
+        pass
+    """
+    assert lint(ok, "src/repro/core/new.py", rule="determinism") == []
+
+
+# ---------------------------------------------------------------------------
+# hook-discipline
+# ---------------------------------------------------------------------------
+
+def test_hook_discipline_flags_foreign_bookkeeping_writes():
+    bad = """\
+    node.used += job.chips
+    node.healthy = False
+    self._free_total -= 8
+    cluster._tier_free[tier] = 0
+    cluster.abnormal_nodes.add(nid)
+    setattr(node, "speed", 0.5)
+    """
+    out = lint(bad, "src/repro/core/sim.py", rule="hook-discipline")
+    assert names(out) == ["hook-discipline"] * 6
+
+
+def test_hook_discipline_negatives():
+    ok = """\
+    cluster.fail_node(nid)
+    cluster.set_speed(nid, 0.5)
+    free = cluster._free_total          # reads are fine
+    if node.healthy and not node.draining:
+        pass
+    used = 3                            # bare Name, not a field write
+    job.state = "running"               # not a guarded field
+    """
+    assert lint(ok, "src/repro/core/sim.py", rule="hook-discipline") == []
+    # the owning modules' internal writes are the guarded path itself
+    bad = "self._free_total -= 8\n"
+    assert lint(bad, "src/repro/core/cluster.py",
+                rule="hook-discipline") == []
+    assert lint(bad, "src/repro/core/scheduler.py",
+                rule="hook-discipline") == []
+
+
+# ---------------------------------------------------------------------------
+# slow-marker
+# ---------------------------------------------------------------------------
+
+def test_slow_marker_flags_unmarked_heavy_materialization():
+    bad = """\
+    import pytest
+
+    def test_replay_month(tmp_path):
+        cfg = scale_preset("month-50k")
+        tr = synthesize(cfg)
+        assert tr.jobs
+    """
+    out = lint(bad, "tests/test_new.py", rule="slow-marker")
+    assert names(out) == ["slow-marker"]
+    assert "test_replay_month" in out[0].message
+
+
+def test_slow_marker_negatives():
+    marked = """\
+    import pytest
+
+    @pytest.mark.slow
+    def test_replay_month(tmp_path):
+        tr = synthesize(scale_preset("month-50k"))
+    """
+    assert lint(marked, "tests/test_new.py", rule="slow-marker") == []
+    module_marked = """\
+    import pytest
+    pytestmark = pytest.mark.slow
+
+    def test_replay_month(tmp_path):
+        tr = synthesize(scale_preset("month-50k"))
+    """
+    assert lint(module_marked, "tests/test_new.py", rule="slow-marker") == []
+    # config-shape checks on a heavy preset don't materialize it: cheap
+    shape_only = """\
+    def test_month_shape():
+        cfg = scale_preset("month-50k")
+        assert cfg.n_jobs == 50_000
+    """
+    assert lint(shape_only, "tests/test_new.py", rule="slow-marker") == []
+    light = """\
+    def test_small_replay():
+        tr = synthesize(scale_preset("tiny"))
+    """
+    assert lint(light, "tests/test_new.py", rule="slow-marker") == []
+
+
+# ---------------------------------------------------------------------------
+# framework: suppressions, parse errors, scoping
+# ---------------------------------------------------------------------------
+
+def test_trailing_suppression_silences_one_site():
+    src = ('import os\n'
+           'os.environ["A"] = "1"  # repolint: disable=env-discipline\n'
+           'os.environ["B"] = "2"\n')
+    out = check_source(src, "src/repro/launch/new.py")
+    assert [(v.rule, v.line) for v in out] == [("env-discipline", 3)]
+
+
+def test_comment_line_above_extends_to_next_line():
+    src = ('import os\n'
+           '# one-shot knob, justified here  # repolint: disable=env-discipline\n'
+           'os.environ["A"] = "1"\n')
+    assert check_source(src, "src/repro/launch/new.py") == []
+
+
+def test_disable_all_and_multi_rule_lists():
+    src = ('import time, os\n'
+           'os.environ["A"] = str(time.time())  # repolint: disable=all\n')
+    assert check_source(src, "src/repro/core/new.py") == []
+    sup = find_suppressions(
+        "x = 1  # repolint: disable=compat-drift, env-discipline\n")
+    assert sup[1] == {"compat-drift", "env-discipline"}
+
+
+def test_suppression_must_name_the_right_rule():
+    src = ('import os\n'
+           'os.environ["A"] = "1"  # repolint: disable=compat-drift\n')
+    out = check_source(src, "src/repro/launch/new.py")
+    assert names(out) == ["env-discipline"]
+
+
+def test_syntax_error_becomes_parse_error_violation():
+    out = check_source("def broken(:\n", "src/repro/core/new.py")
+    assert names(out) == ["parse-error"] and out[0].line == 1
+
+
+def test_rules_skip_out_of_scope_paths():
+    # a file outside every include prefix runs zero rules
+    assert check_source("import os\nos.environ['A']='1'\n",
+                        "docs/example.py") == []
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_and_count_semantics(tmp_path):
+    src = ('import os\nos.environ["A"] = "1"\nos.environ["B"] = "2"\n')
+    vs = check_source(src, "src/repro/launch/old.py")
+    assert len(vs) == 2
+    p = tmp_path / "baseline.json"
+    save_baseline(str(p), make_baseline(vs))
+    baseline = load_baseline(str(p))
+    assert baseline["entries"] == {
+        "src/repro/launch/old.py::env-discipline": 2}
+
+    # exact match: everything grandfathered
+    fresh, grand = apply_baseline(vs, baseline)
+    assert fresh == [] and grand == 2
+    # counts are upper bounds: fixing one finding keeps the gate green
+    fresh, grand = apply_baseline(vs[:1], baseline)
+    assert fresh == [] and grand == 1
+    # one *more* finding of the same (path, rule) overflows the budget
+    extra = check_source(src + 'os.environ["C"] = "3"\n',
+                         "src/repro/launch/old.py")
+    fresh, grand = apply_baseline(extra, baseline)
+    assert len(fresh) == 1 and grand == 2
+    # a different file never borrows another file's budget
+    other = check_source(src, "src/repro/launch/new.py")
+    fresh, _ = apply_baseline(other, baseline)
+    assert len(fresh) == 2
+
+
+def test_load_baseline_rejects_malformed(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"version": 1}))
+    with pytest.raises(ValueError):
+        load_baseline(str(p))
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (check_bench contract)
+# ---------------------------------------------------------------------------
+
+def make_repo(tmp_path, dirty=True):
+    d = tmp_path / "src" / "repro" / "launch"
+    d.mkdir(parents=True)
+    body = 'import os\nos.environ["A"] = "1"\n' if dirty else 'X = 1\n'
+    (d / "thing.py").write_text(body)
+    return tmp_path
+
+
+def test_cli_missing_baseline_is_exit_2(tmp_path, capsys):
+    root = make_repo(tmp_path, dirty=False)
+    assert main(["--root", str(root), "--json"]) == EXIT_MISSING_BASELINE
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "missing-baseline"
+
+
+def test_cli_no_baseline_lints_raw(tmp_path, capsys):
+    root = make_repo(tmp_path)
+    assert main(["--root", str(root), "--no-baseline"]) == EXIT_VIOLATIONS
+    assert "env-discipline" in capsys.readouterr().out
+    clean = make_repo(tmp_path / "c", dirty=False)
+    assert main(["--root", str(clean), "--no-baseline"]) == EXIT_OK
+
+
+def test_cli_write_baseline_then_green_then_ratchet(tmp_path, capsys):
+    root = make_repo(tmp_path)
+    assert main(["--root", str(root), "--write-baseline"]) == EXIT_OK
+    capsys.readouterr()
+    # grandfathered: the same tree is now green
+    assert main(["--root", str(root), "--json"]) == EXIT_OK
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "ok" and out["grandfathered"] == 1
+    # a new finding on top of the baseline fails
+    f = root / "src" / "repro" / "launch" / "thing.py"
+    f.write_text(f.read_text() + 'os.environ["B"] = "2"\n')
+    assert main(["--root", str(root), "--json"]) == EXIT_VIOLATIONS
+    out = json.loads(capsys.readouterr().out)
+    assert out["status"] == "violations" and len(out["violations"]) == 1
+
+
+def test_cli_rule_filter_and_unknown_rule(tmp_path, capsys):
+    root = make_repo(tmp_path)
+    # filtering to an unrelated rule: the env write is invisible
+    assert main(["--root", str(root), "--no-baseline",
+                 "--rule", "compat-drift"]) == EXIT_OK
+    capsys.readouterr()
+    with pytest.raises(SystemExit):
+        main(["--root", str(root), "--rule", "not-a-rule"])
+
+
+def test_cli_explicit_paths(tmp_path, capsys):
+    root = make_repo(tmp_path)
+    assert main(["--root", str(root), "--no-baseline",
+                 "src/repro/launch/thing.py"]) == EXIT_VIOLATIONS
+    capsys.readouterr()
+
+
+def test_repo_head_is_clean():
+    """The committed tree lints clean against its committed baseline —
+    the same invocation CI runs."""
+    import os
+
+    from repro.analysis.__main__ import _default_root
+    root = _default_root()
+    report = analyze(root)
+    baseline = load_baseline(os.path.join(root, "repolint_baseline.json"))
+    fresh, _ = apply_baseline(report.violations, baseline)
+    assert fresh == [], "\n".join(v.render() for v in fresh)
