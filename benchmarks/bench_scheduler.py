@@ -54,13 +54,15 @@ import tempfile
 import time
 from typing import Dict, List, Tuple
 
+from repro.ckpt.cost import CheckpointCostModel
 from repro.core import Cluster, ClusterSim, SimConfig, make_policy
 from repro.core.cluster import TierConfig
 from repro.core.compiler import ArtifactStore, TaskCompiler
 from repro.core.scheduler import TenantPlan
-from repro.data.trace import (SCALE_PRESETS, Trace, TraceConfig, horizon,
-                              read_tail, scale_preset, synthesize,
-                              synthesize_stream)
+from repro.core.sim import PredictiveOpsConfig
+from repro.data.trace import (SCALE_PRESETS, ReliabilityConfig, Trace,
+                              TraceConfig, horizon, read_tail, scale_preset,
+                              synthesize, synthesize_stream)
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                            os.pardir, "BENCH_scheduler.json")
@@ -89,7 +91,24 @@ MIXED_TENANT_PLANS = {
 }
 
 
+# points that run with the predictive-operations stack enabled: predictive
+# draining + planned maintenance, the size/interval checkpoint cost model,
+# and hazard-fed admission control.  Everything else replays reactive-only
+# (and byte-identically to previous snapshots).
+PREDICTIVE_POINTS = {"month-50k-pred"}
+
+# presets whose TraceConfig is an exact clone of another preset's replay the
+# *same committed artifact*: month-50k-pred is the month-50k-rel workload
+# with the predictive stack switched on, so the pred-vs-rel metric deltas
+# isolate the operational change, not workload noise
+ARTIFACT_ALIASES = {"month-50k-pred": "month-50k-rel"}
+
+# one shared cost-model instance so policy and sim price checkpoints alike
+CKPT_COST_MODEL = CheckpointCostModel()
+
+
 def artifact_path(trace_dir: str, name: str, seed: int) -> str:
+    name = ARTIFACT_ALIASES.get(name, name)
     return os.path.join(trace_dir, f"{name}-seed{seed}.json.gz")
 
 
@@ -106,6 +125,14 @@ def config_matches(artifact_config, cfg: TraceConfig) -> bool:
     want = json.loads(json.dumps(dataclasses.asdict(cfg)))
     defaults = json.loads(json.dumps(dataclasses.asdict(TraceConfig())))
     merged = {**defaults, **artifact_config}
+    # the nested reliability config gets the same predates-the-field fill:
+    # adding a knob to ReliabilityConfig (e.g. repair_planned_s, which the
+    # synthesizer never draws) must not strand committed age-model artifacts
+    rel = merged.get("reliability")
+    if isinstance(rel, dict):
+        rel_defaults = json.loads(
+            json.dumps(dataclasses.asdict(ReliabilityConfig())))
+        merged["reliability"] = {**rel_defaults, **rel}
     return merged == want
 
 
@@ -174,6 +201,7 @@ def run_one(policy: str, name: str, cfg: TraceConfig, seed: int,
     reliability_aware = cfg.reliability is not None
     tiered = bool(cfg.mig_chips_per_host or cfg.shared_chips_per_host)
     streamed = cfg.n_jobs >= STREAM_JOBS_THRESHOLD
+    predictive = name in PREDICTIVE_POINTS and reliability_aware
     with tempfile.TemporaryDirectory() as td:
         compiler = TaskCompiler(ArtifactStore(td + "/cas"), td + "/work")
         cluster = make_cluster(cfg)
@@ -182,11 +210,18 @@ def run_one(policy: str, name: str, cfg: TraceConfig, seed: int,
                           tenant_weights={"lab-a": 2, "lab-b": 1,
                                           "lab-c": 1},
                           reliability_aware=reliability_aware,
-                          plans=MIXED_TENANT_PLANS if tiered else None)
+                          plans=MIXED_TENANT_PLANS if tiered else None,
+                          admission_control=predictive,
+                          ckpt_model=CKPT_COST_MODEL if predictive else None,
+                          ckpt_interval_s=60)
         sim = ClusterSim(cluster, pol, SimConfig(
             tick=2.0, checkpoint_interval_s=60, checkpoint_cost_s=3,
             restart_cost_s=15, engine=engine,
-            record_events=not streamed, compact_completed=streamed))
+            record_events=not streamed, compact_completed=streamed,
+            predictive=PredictiveOpsConfig(
+                repair_planned_s=cfg.reliability.repair_planned_s)
+            if predictive else None,
+            ckpt_model=CKPT_COST_MODEL if predictive else None))
         if streamed:
             until = _install_streamed(sim, compiler, name, cfg, seed,
                                       trace_dir, overridden)
@@ -242,7 +277,8 @@ def merge_seeds(per_seed: List[Dict]) -> Dict:
 _ROW_HEADER = (f"{'policy':10s} {'makespan':>10s} {'avg_wait':>10s} "
                f"{'avg_jct':>10s} {'p95_jct':>10s} {'util':>6s} "
                f"{'preempt':>8s} {'restarts':>8s} {'mttf_h':>8s} "
-               f"{'repair_h':>8s} {'avoided':>7s} {'sh_occ':>6s} "
+               f"{'repair_h':>8s} {'avoided':>7s} {'drains':>6s} "
+               f"{'lost_h':>7s} {'sh_occ':>6s} "
                f"{'spot_pre':>8s} {'frag':>6s} {'rss_mb':>8s} "
                f"{'wall_s':>8s}")
 
@@ -253,6 +289,7 @@ def _print_row(pol: str, m: Dict) -> None:
           f"{m['utilization_proxy']:6.3f} {m['preemptions']:8.1f} "
           f"{m['restarts']:8.1f} {m['mttf_hours']:8.1f} "
           f"{m['repair_hours']:8.2f} {m['restarts_avoided']:7.1f} "
+          f"{m['drains_proactive']:6.1f} {m['restart_work_lost_hours']:7.2f} "
           f"{m['shared_occupancy']:6.3f} {m['spot_preemptions']:8.1f} "
           f"{m['frag_chips']:6.2f} {m['max_rss_mb']:8.0f} "
           f"{m['wall_s']:8.3f}")
@@ -260,14 +297,15 @@ def _print_row(pol: str, m: Dict) -> None:
 
 def _point_banner(name: str, cfg: TraceConfig, seeds) -> None:
     reliability_aware = cfg.reliability is not None
+    pred = ", predictive-ops" if name in PREDICTIVE_POINTS else ""
     print(f"\n== scale point {name!r}: {cfg.n_jobs} jobs, "
           f"diurnal={cfg.diurnal_amplitude}, "
           f"rack_failure_frac={cfg.rack_failure_frac}, "
-          f"reliability={'age-model' if reliability_aware else 'memoryless'}, "
-          f"seeds={list(seeds)} ==")
+          f"reliability={'age-model' if reliability_aware else 'memoryless'}"
+          f"{pred}, seeds={list(seeds)} ==")
 
 
-def _point_dict(cfg: TraceConfig, seeds,
+def _point_dict(name: str, cfg: TraceConfig, seeds,
                 rows: List[Tuple[str, Dict]]) -> Dict:
     return {
         "n_jobs": cfg.n_jobs,
@@ -275,6 +313,7 @@ def _point_dict(cfg: TraceConfig, seeds,
         "diurnal_amplitude": cfg.diurnal_amplitude,
         "rack_failure_frac": cfg.rack_failure_frac,
         "reliability_aware": cfg.reliability is not None,
+        "predictive": name in PREDICTIVE_POINTS,
         "total_wall_s": sum(m["wall_s"] for _, m in rows),
         "results": {pol: m for pol, m in rows},
     }
@@ -298,7 +337,7 @@ def run_point(name: str, trace_cfg: TraceConfig, policies: List[str],
                                  trace_dir, overridden) for seed in seeds])
         rows.append((pol, m))
         _print_row(pol, m)
-    return _point_dict(trace_cfg, seeds, rows)
+    return _point_dict(name, trace_cfg, seeds, rows)
 
 
 # -- parallel runner ---------------------------------------------------------
@@ -348,7 +387,7 @@ def run_points_parallel(names: List[str], cfgs: Dict[str, TraceConfig],
                              for seed in point_seeds[name]])
             rows.append((pol, m))
             _print_row(pol, m)
-        points[name] = _point_dict(cfgs[name], point_seeds[name], rows)
+        points[name] = _point_dict(name, cfgs[name], point_seeds[name], rows)
     return points
 
 
@@ -367,6 +406,30 @@ reliability metrics columns (also keys in BENCH_scheduler.json results):
   reliable pods/nodes and goodput weights grants by pod locality x survival
   probability over the predicted remaining runtime.  Memoryless presets
   replay byte-identically to previous snapshots.
+
+predictive-operations columns (all points report them; the predictive
+stack itself is enabled only on month-50k-pred):
+  drains_proactive  node drains taken ahead of a believed failure — the
+                    hazard belief crossed the knee (wear-out threshold or
+                    observed fail count), so the node's gangs were
+                    checkpoint-requeued and a short *planned* repair was
+                    scheduled, after which the node returns as new
+  goodput_saved_hours
+                    uncheckpointed chip-hours those drains preserved (a
+                    reactive failure would have lost them)
+  ckpt_overhead_hours
+                    chip-hours gangs spent paused saving / restoring
+                    checkpoints (size- and gang-dependent cost model on
+                    predictive points; flat costs elsewhere)
+  restart_work_lost_hours
+                    uncheckpointed chip-hours actually lost to failures
+  month-50k-pred replays the *same committed artifact* as month-50k-rel
+  (the preset is an exact clone, aliased to the rel artifact) with
+  predictive draining + planned maintenance, the checkpoint cost model and
+  hazard-fed admission control enabled.  check_bench.py cross-gates the
+  pair within one snapshot: repair_hours and restart_work_lost_hours must
+  be strictly below the reactive baseline at equal-or-better
+  useful_chip_seconds.
 
 isolation-tier metrics columns (format-3 mixed presets; zero elsewhere):
   shared_occupancy  time-weighted mean occupancy of the shared
@@ -492,7 +555,17 @@ def main(argv: List[str] = None) -> Dict[str, Dict]:
     if args.out:
         snapshot = {"bench": "bench_scheduler", "engine": engine,
                     "points": points}
-        base = points.get("default")
+        if os.path.exists(args.out):
+            # merge into the existing snapshot: points not selected this
+            # invocation keep their committed entries, so refreshing the
+            # month points never requires re-running the year-1M replay
+            try:
+                with open(args.out) as f:
+                    prev = json.load(f).get("points", {})
+            except (OSError, ValueError):
+                prev = {}
+            snapshot["points"] = {**prev, **points}
+        base = snapshot["points"].get("default")
         if base is not None:       # top-level mirror for older tooling
             snapshot.update(base)
         with open(args.out, "w") as f:

@@ -12,7 +12,12 @@ Diffs a candidate scheduler-bench snapshot (default: the working-tree
     exactly on a replayed trace; fair / goodput get METRIC_REL_TOL
     because usage accounting happens at scheduling instants and drifts
     a few percent with engine/ordering changes (see ROADMAP), and
-    restart/preemption counts get the same relative slack.
+    restart/preemption counts get the same relative slack, or
+  - a predictive-ops regression: within the candidate snapshot, the
+    month-50k-pred point (predictive draining on, same replayed trace)
+    must show strictly lower ``repair_hours`` and
+    ``restart_work_lost_hours`` than month-50k-rel at equal-or-better
+    ``useful_chip_seconds`` (see PREDICTIVE_PAIRS).
 
 Intended wiring: CI (or a developer) re-runs ``bench_scheduler.py`` and then
 ``python benchmarks/check_bench.py`` before committing the refreshed
@@ -50,6 +55,16 @@ METRIC_REL_TOL = 0.05           # fair / goodput metric drift allowance
 # runs shared the process (serial vs --workers), so it is recorded but not
 # drift-gated
 SKIP_KEYS = {"wall_s", "max_rss_mb"}
+
+# predictive-ops cross-gate: month-50k-pred replays the *same* trace as
+# month-50k-rel with predictive draining enabled, so within one snapshot
+# the predictive point must strictly beat the reactive baseline on repair
+# downtime and lost work, at equal-or-better goodput.  Compared within the
+# candidate (not against the baseline file) so the pair is gated even on
+# the very first snapshot that carries it.
+PREDICTIVE_PAIRS = {"month-50k-pred": "month-50k-rel"}
+PREDICTIVE_BEAT_KEYS = ("repair_hours", "restart_work_lost_hours")
+GOODPUT_REL_TOL = 1e-9          # useful_chip_seconds equal-or-better slack
 
 
 def load_baseline(ref: str) -> Dict:
@@ -96,6 +111,42 @@ def compare_snapshots(base: Dict, cand: Dict, *,
                         f"{point}/{policy}: {key} drifted "
                         f"{bm[key]!r} -> {cm[key]!r} "
                         f"(tolerance rel={rel})")
+    return violations
+
+
+def predictive_violations(cand: Dict) -> List[str]:
+    """Cross-point gate *within* the candidate snapshot (see
+    PREDICTIVE_PAIRS): for every policy present in both points of a pair,
+    the predictive run must show strictly less repair downtime and lost
+    work than the reactive baseline, without giving up goodput.  Pairs or
+    policies missing from the snapshot are skipped, so partial bench runs
+    never fail this gate by accident."""
+    violations: List[str] = []
+    points = cand.get("points", {})
+    for pred_point, base_point in sorted(PREDICTIVE_PAIRS.items()):
+        p_res = points.get(pred_point, {}).get("results", {})
+        b_res = points.get(base_point, {}).get("results", {})
+        for policy in sorted(set(p_res) & set(b_res)):
+            pm, bm = p_res[policy], b_res[policy]
+            for key in PREDICTIVE_BEAT_KEYS:
+                if key not in pm or key not in bm:
+                    continue
+                # strictly below a positive baseline; a baseline already
+                # at zero has nothing to improve and is not gated (drains
+                # perturb placement, so a lucky-baseline policy may pick
+                # up a stray incident hit — the signal is the positive
+                # baselines, where predictive ops must pay for itself)
+                if bm[key] > 0 and not pm[key] < bm[key]:
+                    violations.append(
+                        f"{pred_point}/{policy}: {key} not below "
+                        f"{base_point} ({pm[key]!r} vs {bm[key]!r})")
+            if "useful_chip_seconds" in pm and "useful_chip_seconds" in bm:
+                floor = bm["useful_chip_seconds"] * (1.0 - GOODPUT_REL_TOL)
+                if pm["useful_chip_seconds"] < floor:
+                    violations.append(
+                        f"{pred_point}/{policy}: useful_chip_seconds below "
+                        f"{base_point} ({pm['useful_chip_seconds']!r} vs "
+                        f"{bm['useful_chip_seconds']!r})")
     return violations
 
 
@@ -149,6 +200,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         _emit(args.json, result)
         return EXIT_MISSING_SNAPSHOT
     violations = compare_snapshots(base, cand, check_wall=not args.no_wall)
+    violations += predictive_violations(cand)
     result.update(
         status="regression" if violations else "ok",
         violations=violations,

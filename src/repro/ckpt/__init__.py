@@ -1,2 +1,22 @@
-from repro.ckpt.checkpoint import (Checkpointer, save_checkpoint,
-                                   restore_checkpoint, latest_step)
+"""Checkpointing: sharded save/restore I/O plus a pure cost model.
+
+The I/O layer (``repro.ckpt.checkpoint``) imports jax, but the cost model
+(``repro.ckpt.cost``) is consumed by the jax-free simulator core — so the
+jax-backed names are re-exported lazily (PEP 562) and only resolve when
+actually touched.
+"""
+
+from repro.ckpt.cost import CheckpointCostModel
+
+__all__ = ["CheckpointCostModel", "Checkpointer", "save_checkpoint",
+           "restore_checkpoint", "latest_step"]
+
+_CHECKPOINT_EXPORTS = ("Checkpointer", "save_checkpoint",
+                       "restore_checkpoint", "latest_step")
+
+
+def __getattr__(name):
+    if name in _CHECKPOINT_EXPORTS:
+        from repro.ckpt import checkpoint
+        return getattr(checkpoint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -77,18 +77,28 @@ def save_checkpoint(root: str, step: int, state: Any, *,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    leaves: List[Any] = []
-    skel = _to_skeleton(state, leaves)
-    dtypes: List[str] = []
-    for i, leaf in enumerate(leaves):
-        arr, name = _encode(np.asarray(jax.device_get(leaf)))
-        dtypes.append(name)
-        np.save(os.path.join(tmp, f"leaf_{i:06d}.npy"), arr)
-    manifest = {"step": step, "skeleton": skel, "extra": extra or {},
-                "n_leaves": len(leaves), "dtypes": dtypes,
-                "time": time.time()}
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    # everything before the final rename happens inside the .tmp staging
+    # dir; any mid-write failure (full disk, bad leaf, killed host) must
+    # tear the staging dir down so a retry — or a reader racing latest_step
+    # after a crash — can never observe a readable half-written step dir
+    try:
+        leaves: List[Any] = []
+        skel = _to_skeleton(state, leaves)
+        dtypes: List[str] = []
+        nbytes = 0
+        for i, leaf in enumerate(leaves):
+            arr, name = _encode(np.asarray(jax.device_get(leaf)))
+            dtypes.append(name)
+            nbytes += arr.nbytes
+            np.save(os.path.join(tmp, f"leaf_{i:06d}.npy"), arr)
+        manifest = {"step": step, "skeleton": skel, "extra": extra or {},
+                    "n_leaves": len(leaves), "dtypes": dtypes,
+                    "nbytes": nbytes, "time": time.time()}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)

@@ -14,6 +14,7 @@ from repro.core.compiler import ArtifactStore, ExecutionPlan, TaskCompiler
 from repro.core.cluster import Cluster, Node, NodeHealth, TierConfig
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
                                   Start, TenantPlan, make_policy, POLICIES)
-from repro.core.sim import ClusterSim, SimConfig, SimEvent
+from repro.core.sim import (ClusterSim, PredictiveOpsConfig, SimConfig,
+                            SimEvent)
 from repro.core.executor import LocalExecutor
 from repro.core.service import TACC

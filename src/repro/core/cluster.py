@@ -405,6 +405,11 @@ class Cluster:
         """Integer-quantized hazard (placement sort key; lower = better)."""
         return self._node_hkey[node_id]
 
+    def hazard_per_day(self, node_id: str) -> float:
+        """Believed expected failures/day (float view of the hazard key —
+        what predictive draining compares against its knee)."""
+        return self._node_hkey[node_id] / self._HKEY_SCALE
+
     def pod_hazard_key(self, pod: int) -> int:
         return self._pod_hkey[pod]
 
@@ -773,6 +778,38 @@ class Cluster:
             n.draining = False
         self._mutate(self.nodes[node_id], fn)
         self.abnormal_nodes.discard(node_id)
+
+    def begin_maintenance(self, node_id: str) -> List[str]:
+        """Takes a node down for *planned* maintenance (health -> repairing)
+        without recording a failure: unlike ``fail_node``, a proactive drain
+        is not a reliability event — the hazard belief triggered it, so
+        bumping ``fail_count`` would double-count the wear the belief already
+        prices in. Returns job ids still allocated on the node (a caller
+        that vacated the gangs first gets [])."""
+        self._mutate(self.nodes[node_id],
+                     lambda n: setattr(n, "healthy", False))
+        return self.jobs_on_node(node_id)
+
+    def renew_node(self, node_id: str) -> None:
+        """Planned-maintenance completion: the worn part was replaced, so
+        the node comes back *as new* — age and failure history reset, hazard
+        key re-derived to zero (vs ``recover_node``, which returns a node to
+        service with its reliability history intact)."""
+        live = sum(k for jid in self._node_jobs[node_id]
+                   for nid, k in self.allocations.get(jid, [])
+                   if nid == node_id)
+        node = self.nodes[node_id]
+
+        def fn(n):
+            n.healthy = True
+            n.used = live
+            n.speed = 1.0
+            n.draining = False
+            n.age_days = 0.0
+            n.fail_count = 0
+        self._mutate(node, fn)
+        self.abnormal_nodes.discard(node_id)
+        self._refresh_hazard(node)
 
     def set_speed(self, node_id: str, speed: float) -> None:
         # speed never changes free/used, so _mutate only does the (cheap)

@@ -57,6 +57,7 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.ckpt.cost import CheckpointCostModel
 from repro.core.cluster import FRACTIONAL_TIERS, Cluster
 from repro.core.compiler import ExecutionPlan
 
@@ -268,15 +269,43 @@ class Policy:
     RELIABLE_MIN_EST_S = 600.0
     # default spot price floor for tenants without a plan
     SPOT_PRICE_FLOOR = 0.25
+    # hazard-fed admission control (opt-in via ``admission_control``): a
+    # long+wide gang is held back while its survival probability on the
+    # current fleet sits below the floor — it has the most restart work to
+    # lose on a degraded fleet, and predictive maintenance is actively
+    # renewing nodes, so waiting is cheaper than restarting.  The rate
+    # floor is the fairness valve: once a tenant's rolling admission rate
+    # (starts per submission, decayed in ``account``) drops to it, the
+    # tenant's gangs pass regardless — throttling defers, never starves.
+    ADMIT_SURVIVAL_FLOOR = 0.98
+    ADMIT_RATE_FLOOR = 0.5
+    # optimistic prior on the rolling rate: a tenant with no history reads
+    # as fully admitted (rate 1.0), and the floor only trips after more
+    # than ADMIT_RATE_PRIOR recent submissions went unstarted — without it
+    # a cold-start tenant's very first wide gang would bypass the throttle
+    ADMIT_RATE_PRIOR = 3.0
 
     def __init__(self, quotas: Optional[Dict[str, int]] = None,
                  tenant_weights: Optional[Dict[str, float]] = None,
                  reliability_aware: bool = False,
-                 plans: Optional[Dict[str, TenantPlan]] = None):
+                 plans: Optional[Dict[str, TenantPlan]] = None,
+                 admission_control: bool = False,
+                 ckpt_model: Optional[CheckpointCostModel] = None,
+                 ckpt_interval_s: float = 60.0):
         self.quotas = quotas or {}
         self.weights = tenant_weights or {}
         self.reliability_aware = reliability_aware
+        self.admission_control = admission_control
+        # checkpoint cost model: when set, reliability-aware decisions trade
+        # survival probability against the checkpoint tax (save overhead at
+        # the driver's checkpoint interval, restore cost on restart)
+        self.ckpt_model = ckpt_model
+        self.ckpt_interval_s = ckpt_interval_s
         self.plans = plans or {}
+        # rolling admission counters (decayed submissions / starts per
+        # tenant) — only maintained when admission_control is on
+        self._adm_sub: Dict[str, float] = {}
+        self._adm_start: Dict[str, float] = {}
         self.usage: Dict[str, float] = {}     # decayed chip-seconds / tenant
         # spot pricing signal: leases handed out vs leases reclaimed, counted
         # at action-emit time so every driver path sees the same history
@@ -348,6 +377,9 @@ class Policy:
 
     def job_added(self, job: Job) -> None:
         """Driver hook: ``job`` entered the pending queue (new or requeued)."""
+        if self.admission_control:
+            self._adm_sub[job.tenant] = \
+                self._adm_sub.get(job.tenant, 0.0) + 1.0
         if self._queues is None:
             return
         seq = next(self._admit_seq)
@@ -371,6 +403,9 @@ class Policy:
         """Driver hook: ``job`` entered the running set (chips granted).
         Subclass overrides must call super() — the base keeps the per-
         (tenant, tier) running counts TenantPlan concurrency caps use."""
+        if self.admission_control:
+            self._adm_start[job.tenant] = \
+                self._adm_start.get(job.tenant, 0.0) + 1.0
         key = (job.tenant, job.isolation)
         self._plan_counts[key] = self._plan_counts.get(key, 0) + 1
 
@@ -402,6 +437,14 @@ class Policy:
                 decay: float = 0.999):
         for t in self.usage:
             self.usage[t] *= decay ** dt
+        if self.admission_control and dt > 0:
+            # same decay clock as usage pricing: the admission rate is a
+            # *rolling* starts-per-submission signal, so old history fades
+            f = decay ** dt
+            for t in self._adm_sub:
+                self._adm_sub[t] *= f
+            for t in self._adm_start:
+                self._adm_start[t] *= f
         if self._tenant_chips is not None:
             for t, c in self._tenant_chips.items():
                 if c:
@@ -435,6 +478,40 @@ class Policy:
         """Seconds between periodic invocations the policy wants even when no
         job/cluster state changes; None = event-driven invocation only."""
         return None
+
+    def admission_rate(self, tenant: str) -> float:
+        """Rolling share of a tenant's recent submissions that started,
+        smoothed by the optimistic prior (1.0 with no recent history)."""
+        sub = self._adm_sub.get(tenant, 0.0)
+        start = self._adm_start.get(tenant, 0.0)
+        return min(1.0, (start + self.ADMIT_RATE_PRIOR)
+                   / (sub + self.ADMIT_RATE_PRIOR))
+
+    def _admission_ok(self, job: Job, cluster: Cluster) -> bool:
+        """Hazard-fed admission throttle (True unless ``admission_control``):
+        hold a long+wide gang back while the fleet it would land on gives it
+        a survival probability below the floor, unless the tenant's rolling
+        admission rate already fell to the fairness floor."""
+        if not self.admission_control:
+            return True
+        if job.requested < self.RELIABLE_MIN_CHIPS or \
+                job.spec.estimated_duration_s < self.RELIABLE_MIN_EST_S:
+            return True
+        surv = cluster.survival_probability(
+            job.spec.estimated_duration_s, job.requested)
+        if surv >= self.ADMIT_SURVIVAL_FLOOR:
+            return True
+        return self.admission_rate(job.tenant) < self.ADMIT_RATE_FLOOR
+
+    def _restart_tax_s(self, job: Job) -> float:
+        """Seconds a preempted ``job`` would pay to restore from its last
+        checkpoint (0 without a cost model): checkpoint-aware victim
+        selection prefers victims that are cheap to resume."""
+        if self.ckpt_model is None:
+            return 0.0
+        return self.ckpt_model.restore_cost_s(
+            self.ckpt_model.job_size_gb(job.spec.resources),
+            float(job.chips or job.requested))
 
     def _mk_start(self, job: Job, chips: int) -> Start:
         """Start action; flags failure-aware placement for long, wide jobs
@@ -601,6 +678,8 @@ class FIFO(Policy):
         queue = self._arrival.jobs() if self._queues is not None \
             else sorted(self._exclusive(pending), key=lambda j: j.submit_time)
         for job in queue:
+            if not self._admission_ok(job, cluster):
+                continue     # throttled, not blocked: later jobs may pass
             ok = self._quota_ok(job, running, job.requested, started) and \
                 self._plan_ok(job, running, stier)
             if ok and job.requested <= free:
@@ -663,6 +742,8 @@ class EASYBackfill(Policy):
                              key=lambda j: j.submit_time))
         head: Optional[Job] = None
         for job in queue:                  # start the queue head while it fits
+            if not self._admission_ok(job, cluster):
+                continue      # throttled jobs neither start nor become head
             if job.requested <= free and \
                     self._quota_ok(job, running, job.requested, started) and \
                     self._plan_ok(job, running, stier):
@@ -708,6 +789,8 @@ class EASYBackfill(Policy):
         for job in queue:                  # continues after the head
             if shadow_free == 0:
                 break
+            if not self._admission_ok(job, cluster):
+                continue
             fits = job.requested <= shadow_free
             ends_before = now + job.spec.estimated_duration_s <= reserve_at
             spare = shadow_free - head.requested >= job.requested
@@ -759,6 +842,8 @@ class FairShare(Policy):
         for job in queue:
             if free == 0:
                 break                      # nothing can start any more
+            if not self._admission_ok(job, cluster):
+                continue
             if job.requested <= free and \
                     self._quota_ok(job, running, job.requested, started) and \
                     self._plan_ok(job, running, stier):
@@ -790,6 +875,8 @@ class PriorityPreempt(Policy):
         has_spot = False
         floor: Optional[float] = None         # lowest preemptible priority
         for job in queue:
+            if not self._admission_ok(job, cluster):
+                continue
             if not (self._quota_ok(job, running, job.requested, started)
                     and self._plan_ok(job, running, stier)):
                 continue
@@ -814,10 +901,15 @@ class PriorityPreempt(Policy):
                     break                  # no fit and nothing preemptible
                 continue                   # no strictly-lower victims exist
             if victims is None:
+                # within a (spot, priority) class, checkpoint-aware victim
+                # selection takes the gang cheapest to resume first (the
+                # restart tax is 0.0 for every job without a cost model, so
+                # the historical newest-first order is unchanged then)
                 victims = sorted(
                     (j for j in running if not j.fractional
                      and (j.spec.resources.preemptible or j.spot)),
                     key=lambda j: (0 if j.spot else 1, self.job_priority(j),
+                                   self._restart_tax_s(j),
                                    -j.start_time if j.start_time is not None
                                    else 0.0))
             gain = free
@@ -869,6 +961,13 @@ class GoodputElastic(Policy):
         score = cluster.survival_probability(remaining_s, chips)
         if chips > cluster.pod_capacity_chips:
             score *= self.CROSS_POD_LOCALITY
+        if self.ckpt_model is not None:
+            # checkpoint tax: the wall-time fraction a gang of this size
+            # spends saving state instead of stepping — survival gained by
+            # going wider is traded against the barrier cost of the width
+            score *= 1.0 - self.ckpt_model.overhead_fraction(
+                self.ckpt_model.job_size_gb(job.spec.resources), chips,
+                self.ckpt_interval_s)
         return score
 
     def _marginal(self, job: Job, chips: int, cluster: Cluster) -> float:
@@ -901,6 +1000,8 @@ class GoodputElastic(Policy):
         for j in queue:
             if free <= 0:
                 break
+            if not self._admission_ok(j, cluster):
+                continue
             need = j.min_chips if j.elastic else j.requested
             if not 0 < need <= free:
                 continue
@@ -933,9 +1034,14 @@ class GoodputElastic(Policy):
         self._dirty = False
         # fractional jobs live outside the goodput budget: they consume
         # mig/shared quanta, not the exclusive chips rebalanced here
+        # admission control holds *pending* throttled gangs out of the
+        # rebalance entirely (running jobs are never revoked by it —
+        # admission throttles entry, it does not evict)
         jobs = [j for j in itertools.chain(running, pending)
                 if j.state in (JobState.RUNNING, JobState.PENDING)
-                and not j.fractional]
+                and not j.fractional
+                and (j.state == JobState.RUNNING
+                     or self._admission_ok(j, cluster))]
         if not jobs:
             return []
         total = cluster.exclusive_capacity()

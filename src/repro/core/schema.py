@@ -86,6 +86,14 @@ class ResourceSpec:
     def __post_init__(self):
         object.__setattr__(self, "chips", parse_chips(self.chips))
 
+    def checkpoint_gb_per_chip(self, state_frac: float = 0.3) -> float:
+        """Per-chip checkpoint shard size implied by the HBM budget: model
+        + optimizer state occupy a roughly fixed fraction of the memory the
+        gang was sized for.  A derived method (not a stored field) so spec
+        hashes — and every committed trace artifact keyed on them — are
+        unchanged."""
+        return state_frac * self.hbm_gb_per_chip
+
     @property
     def quanta(self) -> int:
         """The demand in the tier's exact integer quanta: whole chips for

@@ -26,6 +26,30 @@ from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
 from repro.core.schema import TaskSpec
 
 
+# executor control calls (checkpoint / deprovision) hit the local runtime's
+# filesystem and process state; transient errors there must not wedge the
+# whole control loop, but retries have to be *bounded* — an executor that
+# keeps failing should surface the error, not spin forever
+RETRY_LIMIT = 3
+RETRY_BACKOFF_S = 0.05          # doubles per attempt ...
+RETRY_BACKOFF_CAP_S = 2.0       # ... up to this ceiling
+
+
+def _with_retry(op: str, fn: Callable[[], Any], *,
+                sleep: Callable[[float], None] = time.sleep) -> Any:
+    """Run ``fn`` with bounded exponential backoff; re-raise the final
+    failure so callers never silently lose an executor error."""
+    delay = RETRY_BACKOFF_S
+    for attempt in range(RETRY_LIMIT):
+        try:
+            return fn()
+        except Exception:
+            if attempt == RETRY_LIMIT - 1:
+                raise
+            sleep(min(delay, RETRY_BACKOFF_CAP_S))
+            delay *= 2.0
+
+
 class TACC:
     def __init__(self, root: str, *, policy: str = "backfill",
                  cluster: Optional[Cluster] = None, quantum_steps: int = 10,
@@ -59,7 +83,8 @@ class TACC:
     def kill(self, job_id: str) -> None:
         job = self.jobs[job_id]
         if job.state == JobState.RUNNING:
-            self.executor.deprovision(job_id)
+            _with_retry("deprovision",
+                        lambda: self.executor.deprovision(job_id))
             self.cluster.release(job_id)
         job.state = JobState.KILLED
         job.end_time = time.time()
@@ -106,15 +131,19 @@ class TACC:
                     if job.first_start is None:
                         job.first_start = job.start_time
             elif isinstance(a, Preempt) and job.state == JobState.RUNNING:
-                self.executor.checkpoint(job.id)      # checkpoint-then-preempt
-                self.executor.deprovision(job.id)
+                # checkpoint-then-preempt
+                _with_retry("checkpoint",
+                            lambda j=job: self.executor.checkpoint(j.id))
+                _with_retry("deprovision",
+                            lambda j=job: self.executor.deprovision(j.id))
                 self.cluster.release(job.id)
                 job.preemptions += 1
                 job.state = JobState.PENDING
                 job.chips = 0
             elif isinstance(a, Resize) and job.state == JobState.RUNNING \
                     and not job.fractional:
-                self.executor.checkpoint(job.id)
+                _with_retry("checkpoint",
+                            lambda j=job: self.executor.checkpoint(j.id))
                 self.cluster.release(job.id)
                 if self.cluster.try_allocate(
                         job.id, a.chips,

@@ -52,12 +52,32 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
+import random
 from dataclasses import dataclass
-from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
+from repro.ckpt.cost import CheckpointCostModel
 from repro.core.cluster import Cluster
 from repro.core.scheduler import (Job, JobState, Policy, Preempt, Resize,
                                   Start)
+
+
+@dataclass(frozen=True)
+class PredictiveOpsConfig:
+    """Predictive-operations knobs: act on the hazard belief, not the
+    failure (ROADMAP direction 3).  A periodic sweep drains nodes whose
+    believed hazard crossed the knee, checkpoint-requeues their gangs,
+    and schedules *planned* maintenance — a short repair (parts staged,
+    no diagnosis) after which the node returns as new (age and failure
+    history reset).  All inert at ``SimConfig.predictive=None``: the
+    unsignalled fleet replays byte-identically."""
+    hazard_knee_per_day: float = 4.0e-3   # believed failures/day knee
+    fail_count_knee: int = 2              # ... or this many observed fails
+    sweep_interval_s: float = 3600.0
+    max_concurrent: int = 4               # planned repairs in flight
+    min_free_chips: int = 64              # headroom needed to vacate safely
+    repair_planned_s: Tuple[float, float] = (1800.0, 0.4)  # lognorm med, sigma
 
 
 @dataclass
@@ -84,12 +104,18 @@ class SimConfig:
     # own baseline, it is not byte-compared against an unbounded one.
     record_events: bool = True
     compact_completed: bool = False
+    # predictive operations (None = off: reactive-only, byte-identical to
+    # the historical behavior) and the size/interval-dependent checkpoint
+    # cost model (None = the flat checkpoint_cost_s / restart_cost_s
+    # constants above; set, it also charges a restore pause on restarts)
+    predictive: Optional[PredictiveOpsConfig] = None
+    ckpt_model: Optional[CheckpointCostModel] = None
 
 
 @dataclass
 class SimEvent:
     time: float
-    kind: str                # fail_node | recover_node | set_speed | incident
+    kind: str        # fail_node | recover_node | set_speed | incident | renew_node
     node: str
     value: float = 0.0       # set_speed: factor; incident: repair seconds
     info: str = ""           # incident: "transient" | "hard"
@@ -142,6 +168,18 @@ class ClusterSim:
         # integrals accrue whenever the clock advances, BEFORE any state
         # mutation at the new instant — occupancy is piecewise-constant
         # between mutations, so this is exact (all zero untiered).
+        # predictive-operations state (all inert when cfg.predictive is
+        # None: the rng is never drawn, the sets stay empty, the counters
+        # stay zero — so legacy replays are byte-identical)
+        self._pred_rng = random.Random(cfg.seed)      # planned-repair times
+        self._maint_nodes: Set[str] = set()           # planned repairs live
+        self._renewed: Set[str] = set()               # renewed-as-new nodes
+        self._next_sweep = (cfg.predictive.sweep_interval_s
+                            if cfg.predictive is not None else 0.0)
+        self._drains_proactive = 0
+        self._goodput_saved_s = 0.0   # uncheckpointed chip-s saved by drains
+        self._ckpt_overhead_s = 0.0   # chip-s paused saving/restoring state
+        self._lost_work_s = 0.0       # uncheckpointed chip-s lost to failures
         self._spot_preempts = 0
         self._tier_t = 0.0                    # metrics clock
         self._occ_shared_s = 0.0              # integral of shared_occupancy
@@ -224,6 +262,25 @@ class ClusterSim:
         job.log(self.now, msg)
         self.trace.append((self.now, job.id, msg))
 
+    def _save_cost_s(self, job: Job) -> float:
+        """Pause for one checkpoint save: flat ``checkpoint_cost_s`` without
+        a cost model, size- and gang-dependent with one."""
+        m = self.cfg.ckpt_model
+        if m is None:
+            return self.cfg.checkpoint_cost_s
+        return m.save_cost_s(m.job_size_gb(job.spec.resources),
+                             float(job.chips))
+
+    def _restore_cost_s(self, job: Job) -> float:
+        """Extra pause a restart pays to load its last checkpoint (zero
+        without a cost model — the flat ``restart_cost_s`` then stands in
+        for provisioning *and* restore, as it always has)."""
+        m = self.cfg.ckpt_model
+        if m is None or not (job.restarts or job.preemptions):
+            return 0.0
+        return m.restore_cost_s(m.job_size_gb(job.spec.resources),
+                                float(job.chips))
+
     def _start(self, job: Job, chips: int, reliable: bool = False) -> None:
         job.place_reliable = reliable
         if job.fractional:
@@ -252,7 +309,10 @@ class ClusterSim:
         job.start_time = self.now
         if job.first_start is None:
             job.first_start = self.now
-        self._pause_until[job.id] = self.now + (
+        restore_s = self._restore_cost_s(job)
+        if restore_s > 0:
+            self._ckpt_overhead_s += restore_s * float(job.chips)
+        self._pause_until[job.id] = self.now + restore_s + (
             self.cfg.restart_cost_s if job.restarts or job.preemptions else 0.0)
         self._last_ckpt[job.id] = self.now
         self._log(job, f"start chips={chips} pods={self.cluster.job_pods(job.id)}")
@@ -272,7 +332,11 @@ class ClusterSim:
         if checkpoint:
             job.ckpt_progress = job.progress
         else:
-            job.progress = job.ckpt_progress           # lose uncheckpointed work
+            lost = job.progress - job.ckpt_progress    # lose uncheckpointed work
+            if lost > 0:
+                self._lost_work_s += lost \
+                    * job.spec.entry.get("work_per_step", 1.0)
+            job.progress = job.ckpt_progress
         self.cluster.release(job.id)
         if not job.fractional:
             self.policy.grant_delta(job.tenant, -job.chips, spot=job.spot)
@@ -400,9 +464,74 @@ class ClusterSim:
                 hit = True
         return hit
 
+    def _predictive_sweep(self) -> bool:
+        """Predictive draining: vacate and proactively repair nodes whose
+        believed hazard crossed the knee, *before* the wear-out failure
+        lands.  Unlike a failure, a drain is graceful — gangs settle and
+        checkpoint, so uncheckpointed progress survives (that delta is the
+        goodput saved) — and the repair is planned (short distribution,
+        node returns as new).  Returns True if any node was drained."""
+        pred = self.cfg.predictive
+        hit = False
+        for nid, node in self.cluster.nodes.items():
+            if len(self._maint_nodes) >= pred.max_concurrent:
+                break
+            if not node.healthy or node.draining or nid in self._renewed:
+                continue
+            if self.cluster.hazard_per_day(nid) < pred.hazard_knee_per_day \
+                    and node.fail_count < pred.fail_count_knee:
+                continue
+            if self.cluster.free_chips() < pred.min_free_chips:
+                break           # not enough headroom to vacate safely
+            self.cluster.drain(nid)
+            for jid in self.cluster.jobs_on_node(nid):
+                job = self._running_jobs.get(jid)
+                if job is None:
+                    continue
+                if self._event_mode:
+                    self._settle(job)
+                saved = max(0.0, job.progress - job.ckpt_progress)
+                self._goodput_saved_s += saved \
+                    * job.spec.entry.get("work_per_step", 1.0)
+                job.restarts += 1
+                self._stop(job, JobState.PENDING, checkpoint=True,
+                           reason=f"predictive-drain({nid})")
+            self._drains_proactive += 1
+            # planned maintenance: parts staged ahead of time, so the
+            # repair-time distribution is the short one in the trace's
+            # reliability model; renew_node fires when it completes
+            self.cluster.begin_maintenance(nid)
+            med, sigma = pred.repair_planned_s
+            repair_s = self._pred_rng.lognormvariate(math.log(med), sigma)
+            self._repair_s += repair_s
+            self._repair_until[nid] = self.now + repair_s
+            self._maint_nodes.add(nid)
+            if self._event_mode:
+                self._push(self.now + repair_s, "renew_done", nid)
+            else:
+                self.pending_events.append(SimEvent(
+                    self.now + repair_s, "renew_node", nid))
+                self._workload_dirty = True
+            hit = True
+        if hit:
+            self.policy.note_change()
+        return hit
+
+    def _renew(self, node_id: str) -> None:
+        """Planned-maintenance completion: the node returns as new."""
+        self._maint_nodes.discard(node_id)
+        self._repair_until.pop(node_id, None)
+        self.cluster.renew_node(node_id)
+        self._renewed.add(node_id)
+
     def _apply_injected(self, ev: SimEvent) -> None:
         self.policy.note_change()
         if ev.kind in ("fail_node", "incident"):
+            if ev.kind == "incident" and ev.node in self._renewed:
+                # proactive maintenance already replaced the worn part this
+                # incident was sampled from: the wear-out failure no longer
+                # happens (memoryless fail_node events still apply)
+                return
             if not self.cluster.nodes[ev.node].healthy:
                 return          # already down: a dead node cannot fail again
             victims = self.cluster.fail_node(ev.node)
@@ -436,6 +565,11 @@ class ClusterSim:
                 return          # an incident repair still owns this node
             self._repair_until.pop(ev.node, None)
             self.cluster.recover_node(ev.node)
+        elif ev.kind == "renew_node":
+            # tick-engine planned-maintenance completion (the event engine
+            # uses its own heap event, "renew_done")
+            if ev.node in self._maint_nodes:
+                self._renew(ev.node)
         elif ev.kind == "set_speed":
             # snapshot each affected running job's effective speed first: a
             # job whose rate is gated elsewhere (min over its nodes) keeps a
@@ -472,6 +606,10 @@ class ClusterSim:
         # injected events
         while self.pending_events and self.pending_events[0].time <= self.now:
             self._apply_injected(self.pending_events.pop(0))
+        # predictive draining sweep (same cadence as the event engine)
+        if self.cfg.predictive is not None and self.now >= self._next_sweep:
+            self._next_sweep = self.now + self.cfg.predictive.sweep_interval_s
+            self._predictive_sweep()
         # straggler mitigation: drain + checkpoint-restart without the node
         if self.cfg.straggler_mitigation:
             self._straggler_sweep()
@@ -483,7 +621,9 @@ class ClusterSim:
                     self.cfg.checkpoint_interval_s:
                 job.ckpt_progress = job.progress
                 self._last_ckpt[job.id] = self.now
-                self._pause_until[job.id] = self.now + self.cfg.checkpoint_cost_s
+                cost = self._save_cost_s(job)
+                self._ckpt_overhead_s += cost * float(job.chips)
+                self._pause_until[job.id] = self.now + cost
                 continue
             sps = job.steps_per_s(job.chips,
                                   self.cluster.crosses_pods(job.id))
@@ -572,6 +712,17 @@ class ClusterSim:
             if live or self._n_external > 0:
                 self._push(self.now + payload, "wakeup", payload)
             return True
+        if kind == "pred_sweep":
+            live = bool(self._pending_jobs or self._running_jobs)
+            if live or self._n_external > 0 or self._maint_nodes:
+                self._push(self.now + payload, "pred_sweep", payload)
+            return self._predictive_sweep()
+        if kind == "renew_done":
+            if payload not in self._maint_nodes:
+                return False
+            self._renew(payload)
+            self.policy.note_change()
+            return True
         if kind == "ckpt_start":
             job = self._fresh(payload)
             if job is None:
@@ -581,7 +732,9 @@ class ClusterSim:
             job.ckpt_progress = job.progress
             self._last_ckpt[job.id] = self.now
             clk.next_ckpt = self.now + self.cfg.checkpoint_interval_s
-            clk.pause_until = self.now + self.cfg.checkpoint_cost_s
+            cost = self._save_cost_s(job)
+            self._ckpt_overhead_s += cost * float(job.chips)
+            clk.pause_until = self.now + cost
             self._pause_until[job.id] = clk.pause_until
             self._resched(job)
             return False
@@ -660,6 +813,9 @@ class ClusterSim:
         wake = self.policy.wakeup_interval()
         if wake:
             self._push(self.now + wake, "wakeup", wake)
+        if self.cfg.predictive is not None:
+            self._push(self.now + self.cfg.predictive.sweep_interval_s,
+                       "pred_sweep", self.cfg.predictive.sweep_interval_s)
         self._schedule_now()            # jobs registered before run()
         while self._heap:
             t = self._heap[0][0]
@@ -732,6 +888,14 @@ class ClusterSim:
                            / self._n_failures) if self._n_failures else 0.0,
             "repair_hours": self._repair_s / 3600.0,
             "restarts_avoided": float(self._failures_idle),
+            # predictive-operations columns: node drains taken ahead of a
+            # believed failure, the uncheckpointed chip-hours those drains
+            # preserved, chip-hours paused saving/restoring checkpoints,
+            # and uncheckpointed chip-hours actually lost to failures
+            "drains_proactive": float(self._drains_proactive),
+            "goodput_saved_hours": self._goodput_saved_s / 3600.0,
+            "ckpt_overhead_hours": self._ckpt_overhead_s / 3600.0,
+            "restart_work_lost_hours": self._lost_work_s / 3600.0,
         }
         for t in sorted(submitted):
             rel[f"admission_rate_{t}"] = admitted.get(t, 0) / submitted[t]

@@ -131,6 +131,12 @@ class ReliabilityConfig:
     transient_frac: float = 0.7
     repair_transient_s: Tuple[float, float] = (300.0, 0.6)   # median, sigma
     repair_hard_s: Tuple[float, float] = (10800.0, 0.9)      # median, sigma
+    # planned-maintenance repair time (median, sigma): what a *proactive*
+    # drain pays instead of a reactive hard repair — parts staged, no
+    # diagnosis, scheduled off-peak.  Consumed by the sim's predictive-ops
+    # layer only (never drawn during synthesis), so the trace rng stream,
+    # artifact bytes and replay of unsignalled fleets are all unchanged.
+    repair_planned_s: Tuple[float, float] = (1800.0, 0.4)
 
 
 def hazard_per_day(age_days: float, shape: float,
@@ -363,6 +369,21 @@ SCALE_PRESETS: Dict[str, TraceConfig] = {
     # reliability-aware policies (failure-aware placement + survival-weighted
     # goodput); the seed-0 synthesis is a committed artifact like month-50k.
     "month-50k-rel": TraceConfig(
+        n_jobs=50000, mean_gap_s=52.0, diurnal_amplitude=0.7,
+        width_alpha=1.2, n_failures=0, rack_failure_frac=0.0,
+        n_stragglers=400, ops_start=3600.0, ops_window=2550000.0,
+        reliability=ReliabilityConfig(
+            age_days=(30.0, 1460.0), weibull_shape=1.7,
+            weibull_scale_days=200.0, transient_frac=0.7,
+            repair_transient_s=(600.0, 0.6), repair_hard_s=(10800.0, 0.9))),
+    # the month-50k-rel workload replayed under predictive operations: the
+    # TraceConfig is an exact clone of month-50k-rel (same seed-0 bytes —
+    # the bench reuses the committed rel artifact via an alias), but the
+    # bench harness enables predictive draining, the checkpoint cost model
+    # and hazard-fed admission control for this point, so the pred-vs-rel
+    # metric deltas (repair_hours, restart_work_lost_hours) isolate what
+    # acting on the hazard belief buys over reacting to failures.
+    "month-50k-pred": TraceConfig(
         n_jobs=50000, mean_gap_s=52.0, diurnal_amplitude=0.7,
         width_alpha=1.2, n_failures=0, rack_failure_frac=0.0,
         n_stragglers=400, ops_start=3600.0, ops_window=2550000.0,

@@ -147,6 +147,67 @@ def test_artifact_config_match_fills_defaults_for_new_keys():
     assert not bench_scheduler.config_matches(old_style, rel)
 
 
+def _pred_snap(pred, rel):
+    return {"points": {"month-50k-pred": {"results": {"fifo": pred}},
+                       "month-50k-rel": {"results": {"fifo": rel}}}}
+
+
+def test_predictive_gate_passes_when_pred_beats_reactive():
+    cand = _pred_snap(
+        {"repair_hours": 5.0, "restart_work_lost_hours": 1.0,
+         "useful_chip_seconds": 1000.0},
+        {"repair_hours": 9.0, "restart_work_lost_hours": 3.0,
+         "useful_chip_seconds": 1000.0})
+    assert check_bench.predictive_violations(cand) == []
+
+
+def test_predictive_gate_requires_strict_improvement():
+    # equal repair_hours is not "strictly below"
+    cand = _pred_snap(
+        {"repair_hours": 9.0, "restart_work_lost_hours": 1.0,
+         "useful_chip_seconds": 1000.0},
+        {"repair_hours": 9.0, "restart_work_lost_hours": 3.0,
+         "useful_chip_seconds": 1000.0})
+    out = check_bench.predictive_violations(cand)
+    assert len(out) == 1 and "repair_hours" in out[0]
+    # goodput may not regress either
+    cand = _pred_snap(
+        {"repair_hours": 5.0, "restart_work_lost_hours": 1.0,
+         "useful_chip_seconds": 900.0},
+        {"repair_hours": 9.0, "restart_work_lost_hours": 3.0,
+         "useful_chip_seconds": 1000.0})
+    out = check_bench.predictive_violations(cand)
+    assert len(out) == 1 and "useful_chip_seconds" in out[0]
+
+
+def test_predictive_gate_ignores_zero_baselines():
+    # a baseline with nothing to improve is not gated (placement shifts
+    # can hand a lucky-baseline policy a stray incident hit)
+    cand = _pred_snap(
+        {"repair_hours": 5.0, "restart_work_lost_hours": 0.5},
+        {"repair_hours": 9.0, "restart_work_lost_hours": 0.0})
+    assert check_bench.predictive_violations(cand) == []
+
+
+def test_predictive_gate_skips_partial_snapshots():
+    # missing pair member, missing policy, missing keys: all skipped
+    assert check_bench.predictive_violations(
+        {"points": {"month-50k-rel": {"results": {"fifo": {}}}}}) == []
+    assert check_bench.predictive_violations(
+        {"points": {"month-50k-pred": {"results": {"fifo": {}}},
+                    "month-50k-rel": {"results": {"goodput": {}}}}}) == []
+    assert check_bench.predictive_violations(_pred_snap({}, {})) == []
+
+
+def test_predictive_point_aliases_rel_artifact():
+    """month-50k-pred replays month-50k-rel's committed trace bytes — the
+    alias keeps a duplicate 50k-job artifact out of the repo."""
+    import bench_scheduler
+
+    assert bench_scheduler.artifact_path("traces", "month-50k-pred", 0) == \
+        bench_scheduler.artifact_path("traces", "month-50k-rel", 0)
+
+
 def test_git_baseline_loads_committed_snapshot():
     """`--baseline git:HEAD` must parse the committed snapshot (skips when
     git/HEAD is unavailable, e.g. a tarball checkout)."""

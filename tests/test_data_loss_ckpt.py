@@ -1,4 +1,5 @@
 """Data pipeline determinism/sharding, loss masking, checkpoint roundtrip."""
+import json
 import os
 
 import jax
@@ -105,6 +106,103 @@ def test_async_save_and_retention(tmp_path):
     steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
     assert steps == [3, 4]
     assert latest_step(str(tmp_path)) == 4
+
+
+def test_corrupted_manifest_raises_but_keeps_older_step(tmp_path):
+    """A corrupted/truncated manifest fails loudly on restore; an intact
+    older checkpoint stays restorable beside it."""
+    save_checkpoint(str(tmp_path), 1, _state())
+    save_checkpoint(str(tmp_path), 2, _state())
+    man = os.path.join(str(tmp_path), "step_0000000002", "manifest.json")
+    with open(man, "w") as f:
+        f.write('{"step": 2, "skeleton"')          # truncated mid-key
+    with pytest.raises(json.JSONDecodeError):
+        restore_checkpoint(str(tmp_path))          # latest is the bad one
+    r, m = restore_checkpoint(str(tmp_path), step=1)
+    assert m["step"] == 1
+    np.testing.assert_array_equal(np.asarray(r["params"]["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+
+
+def test_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 3, _state())
+    os.remove(os.path.join(str(tmp_path), "step_0000000003",
+                           "leaf_000001.npy"))
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), step=3)
+
+
+def test_failed_save_leaves_no_partial_step_dir(tmp_path):
+    """A save that dies mid-write must tear its .tmp staging dir down:
+    latest_step never sees a readable half-written checkpoint."""
+    class Boom:
+        pass                                       # not array-coercible
+
+    state = {"ok": jnp.ones((2,)), "bad": Boom()}
+    with pytest.raises(Exception):
+        save_checkpoint(str(tmp_path), 5, state)
+    assert os.listdir(tmp_path) == []              # no step_* and no .tmp
+    assert latest_step(str(tmp_path)) is None
+    # the checkpoint root still works after the failure
+    save_checkpoint(str(tmp_path), 6, _state())
+    assert latest_step(str(tmp_path)) == 6
+
+
+def test_async_save_error_propagates_on_wait(tmp_path):
+    class Boom:
+        pass                                       # unpicklable (local class)
+
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(1, {"bad": Boom()})                    # fails in the thread
+    with pytest.raises(Exception):
+        ck.wait()
+    assert latest_step(str(tmp_path)) is None      # nothing half-written
+    ck.save(2, _state())                           # manager still usable
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_restore_reshards_onto_smaller_mesh(tmp_path):
+    """Elastic restart contract: a checkpoint written under one placement
+    restores onto a different (smaller) device set via ``shardings``."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    mesh = jax.make_mesh((1,), ("x",))             # the post-shrink mesh
+    s = _state()
+    save_checkpoint(str(tmp_path), 9, s)
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, PartitionSpec()), s)
+    r, m = restore_checkpoint(str(tmp_path), shardings=shardings)
+    assert m["step"] == 9
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a, np.float64),
+                                      np.asarray(b, np.float64))
+        assert b.sharding.is_equivalent_to(
+            NamedSharding(mesh, PartitionSpec()), np.asarray(b).ndim)
+
+
+def test_retention_under_interleaved_async_saves(tmp_path):
+    """keep-N holds under a save/wait interleave that leaves a .tmp dir
+    from a concurrent writer on disk: GC must count only committed steps
+    and never collect the staging dir."""
+    ck = Checkpointer(str(tmp_path), keep=2)
+    decoy = os.path.join(str(tmp_path), "step_0000000099.tmp")
+    for step in (1, 2, 3):
+        ck.save(step, _state())
+        os.makedirs(decoy, exist_ok=True)          # racing writer's staging
+        ck.save(step + 10, _state())
+    ck.wait()
+    steps = sorted(int(d.split("_")[1].split(".")[0])
+                   for d in os.listdir(tmp_path) if not d.endswith(".tmp"))
+    assert steps == [12, 13]                       # two highest committed
+    assert os.path.isdir(decoy)                    # staging left untouched
+    assert latest_step(str(tmp_path)) == 13
+
+
+def test_manifest_records_nbytes(tmp_path):
+    save_checkpoint(str(tmp_path), 4, _state())
+    _, man = restore_checkpoint(str(tmp_path), step=4)
+    leaves = [np.asarray(x) for x in jax.tree.leaves(_state())]
+    assert man["nbytes"] == sum(a.nbytes for a in leaves)
 
 
 def test_restore_resumes_training(tmp_path):

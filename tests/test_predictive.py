@@ -1,0 +1,370 @@
+"""Predictive operations: hazard-knee draining with planned maintenance,
+checkpoint-aware restart costs, and hazard-fed admission control.
+
+The contract under test: with predictive ops *enabled but unsignalled*
+(fresh fleet, hazard below the knee) a replay is byte-identical to the
+reactive baseline; with an aged fleet the sim drains ahead of believed
+failures, pays a short *planned* repair, returns nodes as-new, and renewed
+nodes absorb the pre-sampled incidents they would otherwise have suffered.
+"""
+import dataclasses
+
+import pytest
+
+from repro.ckpt.cost import CheckpointCostModel
+from repro.core import (Cluster, ClusterSim, PredictiveOpsConfig,
+                        ResourceSpec, RuntimeEnv, SimConfig, SimEvent,
+                        TaskSpec, make_policy)
+from repro.core.compiler import ArtifactStore, TaskCompiler
+from repro.core.scheduler import Job, Policy
+from repro.data.trace import (ReliabilityConfig, TraceConfig, horizon,
+                              synthesize)
+
+
+def mkcompiler(root):
+    return TaskCompiler(ArtifactStore(str(root / "cas")), str(root / "work"))
+
+
+def mkjob(compiler, name, chips, steps=100, *, tenant="t", submit=0.0,
+          min_chips=0, est_s=None):
+    spec = TaskSpec(
+        name=name, tenant=tenant,
+        resources=ResourceSpec(chips=chips, min_chips=min_chips),
+        runtime=RuntimeEnv(backend="shell"),
+        entry={"work_per_step": chips * 0.9, "comm_frac": 0.05},
+        total_steps=steps, estimated_duration_s=est_s or float(steps))
+    return Job(id=name, plan=compiler.compile(spec), submit_time=submit)
+
+
+def small_cluster():
+    return Cluster(n_pods=2, hosts_per_pod=4, chips_per_host=4)   # 32 chips
+
+
+def plain_trace_cfg(seed=0, n_jobs=24):
+    """Workload with ops churn but *no* age model: every hazard key stays
+    zero, so predictive ops has no signal to act on."""
+    return TraceConfig(
+        n_jobs=n_jobs, seed=seed, mean_gap_s=25.0, widths=(4, 8, 16),
+        steps_min=40, steps_max=200, elastic_frac=0.3,
+        n_failures=1, n_stragglers=1, ops_start=50.0, ops_window=2500.0)
+
+
+def aged_trace_cfg(seed=0, n_jobs=24):
+    """Same workload over a worn-out fleet: old ages + wear-out shape give
+    the predictive sweep plenty of nodes over the hazard knee."""
+    return dataclasses.replace(
+        plain_trace_cfg(seed, n_jobs),
+        n_failures=0,
+        reliability=ReliabilityConfig(
+            age_days=(1200.0, 2400.0), weibull_shape=1.7,
+            weibull_scale_days=200.0, transient_frac=0.5,
+            repair_transient_s=(120.0, 0.4), repair_hard_s=(4000.0, 0.6),
+            repair_planned_s=(300.0, 0.2)))
+
+
+PRED = PredictiveOpsConfig(sweep_interval_s=200.0, min_free_chips=0,
+                           repair_planned_s=(300.0, 0.2))
+
+
+def run_trace(tmp_path, cfg, *, engine="event", predictive=None,
+              ckpt_model=None, tag="", seed=0):
+    comp = mkcompiler(tmp_path / f"{engine}{tag}")
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(
+        tick=2.0, checkpoint_interval_s=30, checkpoint_cost_s=2,
+        restart_cost_s=10, engine=engine, seed=seed,
+        predictive=predictive, ckpt_model=ckpt_model))
+    tr = synthesize(cfg, list(c.nodes))
+    tr.install(sim, comp)
+    m = sim.run(until=horizon(tr))
+    return sim, m
+
+
+# -- unsignalled fleet: predictive on must be a no-op --------------------------
+
+@pytest.mark.parametrize("engine", ["event", "tick"])
+def test_predictive_noop_without_hazard_signal(tmp_path, engine):
+    """Fresh fleet (no age model): enabling predictive ops must replay the
+    trace identically — every metric byte-equal to the reactive run."""
+    _, off = run_trace(tmp_path, plain_trace_cfg(), engine=engine, tag="off")
+    _, on = run_trace(tmp_path, plain_trace_cfg(), engine=engine, tag="on",
+                      predictive=PRED)
+    assert on["drains_proactive"] == 0.0
+    assert on == off
+
+
+# -- aged fleet: drains fire, planned repairs renew nodes ----------------------
+
+@pytest.mark.parametrize("engine", ["event", "tick"])
+def test_predictive_drains_and_renews_aged_fleet(tmp_path, engine):
+    sim, m = run_trace(tmp_path, aged_trace_cfg(), engine=engine,
+                       predictive=PRED)
+    assert m["drains_proactive"] > 0
+    assert m["completed"] == m["jobs"]
+    # renewed nodes came back as-new: zero age/fail_count, healthy, hkey 0
+    renewed = sim._renewed
+    assert renewed
+    for nid in renewed:
+        n = sim.cluster.nodes[nid]
+        assert n.healthy and not n.draining
+        assert n.age_days == 0.0 and n.fail_count == 0
+        assert sim.cluster.node_hazard_key(nid) == 0
+    sim.cluster.check_counters()
+    # planned repairs are short: well under the reactive hard-repair scale
+    assert 0 < m["repair_hours"] / m["drains_proactive"] < 0.5
+
+
+def test_renewed_node_absorbs_presampled_incident(tmp_path):
+    """An incident pre-sampled for a node that predictive maintenance
+    already renewed never fires — the worn part was replaced."""
+    comp = mkcompiler(tmp_path)
+    c = small_cluster()
+    nid = "pod0/host000"
+    c.set_node_age(nid, 2400.0)          # far over the default knee
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(
+        engine="event", predictive=PredictiveOpsConfig(
+            sweep_interval_s=50.0, min_free_chips=0,
+            repair_planned_s=(100.0, 0.1))))
+    sim.submit(mkjob(comp, "j", 4, 400, submit=0.0))
+    # the incident the hazard model "predicted": lands long after the sweep
+    sim.inject(SimEvent(5000.0, "incident", nid, 4000.0, "hard"))
+    sim.run(until=12000.0)
+    m = sim.metrics()
+    assert m["drains_proactive"] >= 1
+    assert m["failures"] == 0.0          # absorbed, never fired
+    assert sim.cluster.nodes[nid].healthy
+    assert sim.cluster.nodes[nid].fail_count == 0
+    # only the planned repair was paid, not the 4000 s reactive one
+    assert m["repair_hours"] < 1000.0 / 3600.0
+    sim.cluster.check_counters()
+
+
+def test_draining_checkpoints_gangs_before_maintenance(tmp_path):
+    """Gangs on a drained node restart from their checkpoint: progress is
+    preserved (checkpoint=True requeue), counted in goodput_saved_hours."""
+    comp = mkcompiler(tmp_path)
+    c = Cluster(n_pods=1, hosts_per_pod=2, chips_per_host=4)
+    for nid in c.nodes:
+        c.set_node_age(nid, 2400.0)
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(
+        tick=2.0, checkpoint_interval_s=1e9, engine="event",
+        predictive=PredictiveOpsConfig(
+            sweep_interval_s=300.0, max_concurrent=1, min_free_chips=0,
+            repair_planned_s=(100.0, 0.1))))
+    sim.submit(mkjob(comp, "j", 8, 2000, submit=0.0))
+    sim.run(until=6000.0)
+    m = sim.metrics()
+    assert m["drains_proactive"] >= 1
+    assert sim.jobs["j"].restarts >= 1
+    # with checkpointing effectively disabled, everything saved at the
+    # drain was uncheckpointed work a reactive failure would have lost
+    assert m["goodput_saved_hours"] > 0
+    assert m["restart_work_lost_hours"] == 0.0
+    sim.cluster.check_counters()
+
+
+def test_engine_agreement_on_aged_fleet(tmp_path):
+    ms = {}
+    for engine in ("event", "tick"):
+        _, ms[engine] = run_trace(tmp_path, aged_trace_cfg(seed=2),
+                                  engine=engine, predictive=PRED)
+    assert ms["event"]["completed"] == ms["tick"]["completed"]
+    assert ms["event"]["drains_proactive"] > 0
+    assert ms["tick"]["drains_proactive"] > 0
+
+
+# -- checkpoint cost model -----------------------------------------------------
+
+def test_cost_model_monotonicity():
+    m = CheckpointCostModel()
+    assert m.save_cost_s(4.0, 8) < m.save_cost_s(16.0, 8)     # size
+    assert m.save_cost_s(4.0, 8) < m.save_cost_s(4.0, 256)    # gang width
+    assert m.restore_cost_s(4.0, 8) < m.restore_cost_s(16.0, 8)
+    f = m.overhead_fraction(8.0, 32, 60.0)
+    assert 0.0 < f < 1.0
+    assert f > m.overhead_fraction(8.0, 32, 600.0)            # longer interval
+    assert f < m.overhead_fraction(64.0, 32, 60.0)            # bigger state
+    assert m.expected_lost_s(120.0) == 60.0
+
+
+def test_resource_spec_checkpoint_size():
+    r = ResourceSpec(chips=8, hbm_gb_per_chip=32.0)
+    assert r.checkpoint_gb_per_chip(0.25) == pytest.approx(8.0)
+    m = CheckpointCostModel(state_frac_of_hbm=0.25)
+    assert m.job_size_gb(r) == pytest.approx(8.0)
+
+
+def test_ckpt_model_charges_overhead_and_restore(tmp_path):
+    """With a cost model installed, checkpoint pauses and restores are
+    priced by state size and gang width, and accounted in chip-hours."""
+    comp = mkcompiler(tmp_path)
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(
+        tick=2.0, checkpoint_interval_s=50, restart_cost_s=5,
+        engine="event", ckpt_model=CheckpointCostModel()))
+    sim.submit(mkjob(comp, "j", 8, 500, submit=0.0))
+    sim.inject(SimEvent(200.0, "fail_node", "pod0/host000"))
+    sim.run(until=5000.0)
+    m = sim.metrics()
+    assert m["completed"] == 1.0
+    assert m["ckpt_overhead_hours"] > 0
+    assert sim.jobs["j"].restarts == 1
+
+
+def test_uncheckpointed_failure_loses_work(tmp_path):
+    """A failure between checkpoints rolls progress back and books the
+    uncheckpointed chip-hours as restart_work_lost_hours."""
+    comp = mkcompiler(tmp_path)
+    c = small_cluster()
+    sim = ClusterSim(c, make_policy("fifo"), SimConfig(
+        tick=2.0, checkpoint_interval_s=1e9, restart_cost_s=5,
+        engine="event"))
+    sim.submit(mkjob(comp, "j", 8, 500, submit=0.0))
+    sim.inject(SimEvent(200.0, "fail_node", "pod0/host000"))
+    sim.run(until=5000.0)
+    m = sim.metrics()
+    assert m["restart_work_lost_hours"] > 0
+    assert m["completed"] == 1.0
+
+
+def test_metrics_report_predictive_keys_even_when_off(tmp_path):
+    _, m = run_trace(tmp_path, plain_trace_cfg(), tag="keys")
+    # predictive counters stay zero without the subsystem; the checkpoint /
+    # lost-work accounting reports on every run (flat costs here)
+    assert m["drains_proactive"] == 0.0
+    assert m["goodput_saved_hours"] == 0.0
+    assert m["ckpt_overhead_hours"] > 0.0
+    assert m["restart_work_lost_hours"] >= 0.0
+
+
+# -- hazard-fed admission control ----------------------------------------------
+
+def degraded_cluster():
+    c = small_cluster()
+    for nid in c.nodes:
+        c.set_node_age(nid, 2000.0)
+    c.AGE_HAZARD_PER_DAY = 0.5           # very flaky fleet
+    for nid in c.nodes:                  # re-derive keys under the new rate
+        c.set_node_age(nid, 2000.0)
+    return c
+
+
+def test_admission_throttles_long_wide_gangs_on_degraded_pods(tmp_path):
+    comp = mkcompiler(tmp_path)
+    pol = make_policy("fifo", admission_control=True)
+    risky = mkjob(comp, "risky", 16, 5000, est_s=5000.0)
+    narrow = mkjob(comp, "narrow", 4, 5000, submit=1.0, est_s=5000.0)
+    short = mkjob(comp, "short", 16, 20, submit=2.0, est_s=20.0)
+    for j in (risky, narrow, short):
+        pol.job_added(j)
+    acts = pol.schedule(5.0, [risky, narrow, short], [], degraded_cluster())
+    started = {a.job_id for a in acts}
+    # the long+wide gang is held; small/short work flows through
+    assert started == {"narrow", "short"}
+    # on a healthy fleet the same gang admits immediately
+    acts = pol.schedule(5.0, [mkjob(comp, "risky2", 16, 5000,
+                                    est_s=5000.0)], [], small_cluster())
+    assert {a.job_id for a in acts} == {"risky2"}
+
+
+def test_admission_fairness_floor_eventually_admits(tmp_path):
+    """Throttling defers, it never starves: once a tenant's rolling
+    admission rate falls below the floor, its gang goes through even on a
+    degraded fleet."""
+    comp = mkcompiler(tmp_path)
+    pol = make_policy("fifo", admission_control=True)
+    c = degraded_cluster()
+    job = mkjob(comp, "wide", 16, 5000, est_s=5000.0)
+    pol.job_added(job)
+    assert pol.schedule(0.0, [job], [], c) == []       # throttled
+    # more submissions from the same tenant drive the rolling rate down
+    for i in range(3):
+        pol.job_added(mkjob(comp, f"w{i}", 16, 5000, est_s=5000.0))
+    assert pol.admission_rate("t") < Policy.ADMIT_RATE_FLOOR
+    acts = pol.schedule(1.0, [job], [], c)
+    assert [a.job_id for a in acts] == ["wide"]
+
+
+def test_admission_rate_decays_in_account(tmp_path):
+    comp = mkcompiler(tmp_path)
+    pol = make_policy("fifo", admission_control=True)
+    for i in range(4):
+        pol.job_added(mkjob(comp, f"j{i}", 4, 10, est_s=10.0))
+    pol.job_started(mkjob(comp, "j9", 4, 10, est_s=10.0))
+    assert pol.admission_rate("t") == pytest.approx((1 + 3) / (4 + 3))
+    pol.account(3600.0, [])              # old history decays away
+    assert pol._adm_sub["t"] < 1.0
+    assert pol.admission_rate("t") > 0.9  # recovers toward the 1.0 prior
+
+
+def test_admission_never_revokes_running_jobs(tmp_path):
+    """Admission control gates entry only: a running long+wide gang on a
+    degraded fleet is never preempted by the throttle."""
+    comp = mkcompiler(tmp_path)
+    pol = make_policy("goodput", admission_control=True)
+    c = degraded_cluster()
+    from repro.core.scheduler import JobState, Start
+    job = mkjob(comp, "wide", 16, 5000, est_s=5000.0, min_chips=4)
+    pol.job_added(job)
+    alloc = c.try_allocate(job.id, 16)
+    assert alloc is not None
+    job.state = JobState.RUNNING
+    job.chips = 16
+    job.start_time = 0.0
+    pol.job_started(job)
+    acts = pol.schedule(10.0, [], [job], c)
+    assert not any(a.job_id == "wide" and not isinstance(a, (Start,))
+                   for a in acts if not isinstance(a, Start)) or acts == []
+
+
+# -- bounded retry around executor control calls -------------------------------
+
+def test_with_retry_recovers_from_transient_errors():
+    from repro.core.service import _with_retry
+    calls, sleeps = [], []
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+    assert _with_retry("checkpoint", flaky, sleep=sleeps.append) == "ok"
+    assert len(calls) == 3
+    assert sleeps == [0.05, 0.1]                   # exponential backoff
+
+
+def test_with_retry_bounded_and_reraises():
+    from repro.core.service import (RETRY_BACKOFF_CAP_S, RETRY_LIMIT,
+                                    _with_retry)
+    calls, sleeps = [], []
+    def always():
+        calls.append(1)
+        raise RuntimeError("hard down")
+    with pytest.raises(RuntimeError, match="hard down"):
+        _with_retry("deprovision", always, sleep=sleeps.append)
+    assert len(calls) == RETRY_LIMIT               # no unbounded spinning
+    assert all(s <= RETRY_BACKOFF_CAP_S for s in sleeps)
+
+
+# -- chaos: fault-injection smoke (own CI job, deselected from tier-1) ---------
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("engine", ["event", "tick"])
+def test_chaos_incident_heavy_replay_predictive_on_off(tmp_path, engine):
+    """Replay a short incident-heavy trace with predictive ops on and off:
+    drains fire, all jobs complete both ways, and cluster counters stay
+    consistent under the combined incident/drain/renew churn."""
+    cfg = dataclasses.replace(
+        aged_trace_cfg(seed=7, n_jobs=60),
+        ops_window=6000.0,
+        reliability=dataclasses.replace(
+            aged_trace_cfg().reliability,
+            weibull_scale_days=50.0))    # incident-heavy
+    sim_off, off = run_trace(tmp_path, cfg, engine=engine, tag="off")
+    sim_on, on = run_trace(tmp_path, cfg, engine=engine, tag="on",
+                           predictive=PRED,
+                           ckpt_model=CheckpointCostModel())
+    assert on["drains_proactive"] > 0
+    assert off["drains_proactive"] == 0.0
+    assert on["completed"] == off["completed"] == on["jobs"]
+    sim_on.cluster.check_counters()
+    sim_off.cluster.check_counters()
