@@ -1,7 +1,13 @@
-"""Regression gate for ``BENCH_scheduler.json``.
+"""Regression gate for the committed ``BENCH_*.json`` snapshots.
 
-Diffs a candidate scheduler-bench snapshot (default: the working-tree
-``BENCH_scheduler.json``) against a baseline (default: the committed
+One gate, several snapshot schemas (``--snapshot``, default ``scheduler``):
+
+  scheduler  BENCH_scheduler.json — policy metrics per scale point
+  kernels    BENCH_kernels.json   — per-kernel blocks/roofline/parity from
+             ``bench_kernels.py`` (see ``compare_kernel_snapshots``)
+
+For the scheduler schema it diffs a candidate snapshot (default: the
+working tree) against a baseline (default: the committed
 ``git show HEAD:BENCH_scheduler.json``) and fails on
 
   - a wall-clock regression: per policy/point ``wall_s`` more than
@@ -18,6 +24,16 @@ Diffs a candidate scheduler-bench snapshot (default: the working-tree
     must show strictly lower ``repair_hours`` and
     ``restart_work_lost_hours`` than month-50k-rel at equal-or-better
     ``useful_chip_seconds`` (see PREDICTIVE_PAIRS).
+
+The kernels schema is stricter: everything derived analytically from the
+chosen block sizes (blocks, FLOPs, HBM bytes, roofline fraction,
+``from_table``) must match the baseline *exactly* — a mismatch means the
+committed autotune table and the committed snapshot disagree (the
+table-consistency gate) — while ``max_err`` is gated against the baseline
+with ERR_GROWTH slack plus, within the candidate alone, the per-point
+documented tolerance (``kernel_tolerance_violations``, applied even to the
+very first snapshot).  ``wall_s`` uses the same growth-plus-noise-floor
+gate as the scheduler and the same ``--no-wall`` CI contract.
 
 Intended wiring: CI (or a developer) re-runs ``bench_scheduler.py`` and then
 ``python benchmarks/check_bench.py`` before committing the refreshed
@@ -44,7 +60,9 @@ import sys
 from typing import Dict, List, Optional
 
 REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
-DEFAULT_CANDIDATE = os.path.join(REPO_ROOT, "BENCH_scheduler.json")
+SNAPSHOT_FILES = {"scheduler": "BENCH_scheduler.json",
+                  "kernels": "BENCH_kernels.json"}
+DEFAULT_CANDIDATE = os.path.join(REPO_ROOT, SNAPSHOT_FILES["scheduler"])
 
 # documented tolerances (see module docstring)
 WALL_REGRESSION = 0.20          # fail on > 20% wall_s growth ...
@@ -66,12 +84,21 @@ PREDICTIVE_PAIRS = {"month-50k-pred": "month-50k-rel"}
 PREDICTIVE_BEAT_KEYS = ("repair_hours", "restart_work_lost_hours")
 GOODPUT_REL_TOL = 1e-9          # useful_chip_seconds equal-or-better slack
 
+# kernels schema: numeric-error growth allowance against the baseline
+# (max_err is deterministic on the pinned CI stack, but a slack factor
+# keeps a benign platform delta from masquerading as a kernel regression;
+# the hard bound is the in-snapshot tolerance check either way)
+ERR_GROWTH = 2.0
+ERR_ABS_FLOOR = 1e-9
+# measured / always-changing keys excluded from the exact comparison
+KERNEL_MEASURED_KEYS = {"max_err", "wall_s"}
 
-def load_baseline(ref: str) -> Dict:
+
+def load_baseline(ref: str, filename: str = "BENCH_scheduler.json") -> Dict:
     """``ref`` is a path, or ``git:<rev>`` for the committed snapshot."""
     if ref.startswith("git:"):
         out = subprocess.run(
-            ["git", "show", f"{ref[4:]}:BENCH_scheduler.json"],
+            ["git", "show", f"{ref[4:]}:{filename}"],
             cwd=REPO_ROOT, capture_output=True, text=True, check=True)
         return json.loads(out.stdout)
     with open(ref) as f:
@@ -150,6 +177,57 @@ def predictive_violations(cand: Dict) -> List[str]:
     return violations
 
 
+def compare_kernel_snapshots(base: Dict, cand: Dict, *,
+                             check_wall: bool = True) -> List[str]:
+    """BENCH_kernels.json schema: per kernel point, every key not in
+    KERNEL_MEASURED_KEYS is a deterministic function of the committed
+    autotune table (chosen blocks, analytic FLOPs/bytes/roofline fraction,
+    from_table, tol) and must match exactly; ``max_err`` may not grow past
+    ERR_GROWTH x baseline (+ absolute floor); ``wall_s`` uses the
+    scheduler's growth-plus-noise-floor gate.  Points only in one snapshot
+    are ignored, so adding a bench point never fails the gate by itself."""
+    violations: List[str] = []
+    b_k, c_k = base.get("kernels", {}), cand.get("kernels", {})
+    for name in sorted(set(b_k) & set(c_k)):
+        bm, cm = b_k[name], c_k[name]
+        for key in sorted(set(bm) & set(cm) - KERNEL_MEASURED_KEYS):
+            if cm[key] != bm[key]:
+                violations.append(
+                    f"{name}: {key} changed {bm[key]!r} -> {cm[key]!r} "
+                    f"(deterministic key; retune or re-snapshot)")
+        if "max_err" in bm and "max_err" in cm:
+            limit = bm["max_err"] * ERR_GROWTH + ERR_ABS_FLOOR
+            if cm["max_err"] > limit:
+                violations.append(
+                    f"{name}: max_err grew {bm['max_err']:.3e} -> "
+                    f"{cm['max_err']:.3e} (> {ERR_GROWTH:g}x baseline)")
+        if check_wall and "wall_s" in bm and "wall_s" in cm:
+            growth = cm["wall_s"] - bm["wall_s"]
+            if growth > WALL_NOISE_FLOOR_S and \
+                    growth > WALL_REGRESSION * bm["wall_s"]:
+                violations.append(
+                    f"{name}: wall_s regressed {bm['wall_s']:.3f} -> "
+                    f"{cm['wall_s']:.3f} (> {WALL_REGRESSION:.0%} + "
+                    f"noise floor)")
+    return violations
+
+
+def kernel_tolerance_violations(cand: Dict) -> List[str]:
+    """In-snapshot parity gate (kernels schema): every point's recorded
+    ``max_err`` against ``kernels/ref.py`` must sit within its documented
+    ``tol``.  Like predictive_violations, this needs no baseline, so the
+    very first committed snapshot is already parity-gated."""
+    violations: List[str] = []
+    for name, res in sorted(cand.get("kernels", {}).items()):
+        if "max_err" not in res or "tol" not in res:
+            continue
+        if res["max_err"] > res["tol"]:
+            violations.append(
+                f"{name}: max_err {res['max_err']:.3e} exceeds documented "
+                f"tolerance {res['tol']:g}")
+    return violations
+
+
 EXIT_OK = 0
 EXIT_REGRESSION = 1
 EXIT_MISSING_SNAPSHOT = 2
@@ -170,21 +248,29 @@ def _emit(as_json: bool, result: Dict) -> None:
 
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--candidate", default=DEFAULT_CANDIDATE,
-                    help="snapshot to check (default: working tree)")
+    ap.add_argument("--snapshot", choices=sorted(SNAPSHOT_FILES),
+                    default="scheduler",
+                    help="which BENCH_*.json schema to gate "
+                         "(default: scheduler)")
+    ap.add_argument("--candidate", default=None,
+                    help="snapshot to check (default: the working-tree "
+                         "file for --snapshot)")
     ap.add_argument("--baseline", default="git:HEAD",
                     help="baseline snapshot: a path or git:<rev> "
                          "(default: git:HEAD)")
     ap.add_argument("--no-wall", action="store_true",
-                    help="skip the wall_s gate (metric drift only; the "
+                    help="skip the wall gate (metric drift only; the "
                          "machine-independent mode CI uses on PRs)")
     ap.add_argument("--json", action="store_true",
                     help="emit a machine-readable result object on stdout")
     args = ap.parse_args(argv)
-    result: Dict = {"baseline": args.baseline, "candidate": args.candidate,
-                    "violations": [], "points_compared": 0}
+    filename = SNAPSHOT_FILES[args.snapshot]
+    candidate = args.candidate or os.path.join(REPO_ROOT, filename)
+    result: Dict = {"snapshot": args.snapshot, "baseline": args.baseline,
+                    "candidate": candidate, "violations": [],
+                    "points_compared": 0}
     try:
-        base = load_baseline(args.baseline)
+        base = load_baseline(args.baseline, filename)
     except (FileNotFoundError, subprocess.CalledProcessError,
             json.JSONDecodeError) as e:
         result.update(status="missing-snapshot",
@@ -192,20 +278,27 @@ def main(argv: Optional[List[str]] = None) -> int:
         _emit(args.json, result)
         return EXIT_MISSING_SNAPSHOT
     try:
-        with open(args.candidate) as f:
+        with open(candidate) as f:
             cand = json.load(f)
     except (FileNotFoundError, json.JSONDecodeError) as e:
         result.update(status="missing-snapshot",
-                      detail=f"candidate {args.candidate}: {e}")
+                      detail=f"candidate {candidate}: {e}")
         _emit(args.json, result)
         return EXIT_MISSING_SNAPSHOT
-    violations = compare_snapshots(base, cand, check_wall=not args.no_wall)
-    violations += predictive_violations(cand)
-    result.update(
-        status="regression" if violations else "ok",
-        violations=violations,
-        points_compared=len(set(base.get("points", {}))
-                            & set(cand.get("points", {}))))
+    if args.snapshot == "kernels":
+        violations = compare_kernel_snapshots(base, cand,
+                                              check_wall=not args.no_wall)
+        violations += kernel_tolerance_violations(cand)
+        compared = len(set(base.get("kernels", {}))
+                       & set(cand.get("kernels", {})))
+    else:
+        violations = compare_snapshots(base, cand,
+                                       check_wall=not args.no_wall)
+        violations += predictive_violations(cand)
+        compared = len(set(base.get("points", {}))
+                       & set(cand.get("points", {})))
+    result.update(status="regression" if violations else "ok",
+                  violations=violations, points_compared=compared)
     _emit(args.json, result)
     return EXIT_REGRESSION if violations else EXIT_OK
 

@@ -484,3 +484,40 @@ class SlowMarkerRule(Rule):
                     f"without @pytest.mark.slow — tier-1 must stay under "
                     f"its wall budget"))
         return out
+
+
+# ---------------------------------------------------------------------------
+# block-discipline — ISSUE 10 / ROADMAP direction 5: kernel block sizes are
+# owned by the autotune table (kernels/autotune.py); hard-coded literals at
+# call sites bypass the tuned dispatch and silently pin yesterday's blocks
+# ---------------------------------------------------------------------------
+
+@register
+class BlockDisciplineRule(Rule):
+    name = "block-discipline"
+    description = ("no hard-coded block_q=/block_k=/block_rows= integer "
+                   "literals at call sites — block choices route through "
+                   "kernels/autotune.py (kernel signature defaults are the "
+                   "documented fallbacks and are not call sites)")
+    include = ("src/", "benchmarks/", "tests/")
+    # the table module owns the defaults; analysis/ embeds fixture code
+    exclude = ("src/repro/kernels/autotune.py", "src/repro/analysis/")
+
+    BLOCK_KWARGS = {"block_q", "block_k", "block_rows"}
+
+    def check(self, tree: ast.Module, path: str) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg in self.BLOCK_KWARGS \
+                        and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, int):
+                    out.append(self.violation(
+                        path, node,
+                        f"hard-coded {kw.arg}={kw.value.value} at a call "
+                        f"site — route block choices through the autotune "
+                        f"table (repro.kernels.autotune) so tuning applies "
+                        f"everywhere"))
+        return out

@@ -1,0 +1,265 @@
+"""Shape-keyed block-size autotune table for the Pallas kernel suite.
+
+The kernels historically ran fixed blocks (flash attention 512x512, rmsnorm
+256 rows) regardless of shape.  This module owns the mapping
+
+    (kernel, dtype, shape bucket)  ->  chosen block sizes
+
+as a committed JSON artifact (``autotune_table.json`` next to this file),
+populated by ``benchmarks/bench_kernels.py --tune`` on a developer machine
+and consulted by the ``ops.py`` dispatch layer on every call.  A missing
+entry falls back to the historical fixed blocks through the *exact* legacy
+code path, so an empty table is bit-for-bit the pre-autotune kernel suite
+(pinned by ``tests/test_kernels_autotune.py``).
+
+Shape bucketing: every dimension except the last (the feature/head dim,
+which the MXU tiling keys on exactly) is rounded up to the next power of
+two, so one tuned entry covers the half-open pow2 bin it was tuned in.
+Because a bucket spans many concrete shapes, :func:`plan_flash` re-validates
+the entry against the *actual* shape at dispatch time — a block choice that
+does not divide the sequence is applied via causal-exact padding when the
+overhead is small (``PAD_OVERHEAD_LIMIT``) and otherwise ignored in favor
+of the legacy fallback.  Padding is only ever exact for causal attention
+(appended key rows sit strictly above the diagonal of every real query
+row), so non-causal candidates are pruned to divisible blocks up front.
+
+Block choices must route through this table everywhere outside it: the
+``block-discipline`` repolint rule flags hard-coded ``block_q=`` /
+``block_k=`` / ``block_rows=`` integer literals at call sites (the kernel
+signature defaults are not call sites and stay put).
+"""
+from __future__ import annotations
+
+import json
+import os
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_TABLE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "autotune_table.json")
+TABLE_VERSION = 1
+
+# Historical fixed blocks — the no-entry fallbacks.  These MUST stay in
+# sync with the kernel signature defaults; a missing table entry routes
+# through the kernels' own shrink-to-divide logic exactly as before.
+FLASH_DEFAULT: Tuple[int, int] = (512, 512)
+RMSNORM_DEFAULT_ROWS = 256
+DECODE_DEFAULT_PAGE = 128
+
+# Candidate spaces the --tune sweep explores (powers of two so one padded
+# length divides every block in a candidate pair)
+FLASH_BLOCK_CANDIDATES: Tuple[int, ...] = (128, 256, 512)
+RMSNORM_ROW_CANDIDATES: Tuple[int, ...] = (64, 128, 256, 512)
+DECODE_PAGE_CANDIDATES: Tuple[int, ...] = (64, 128, 256)
+
+# causal padding is exact but not free: prune candidates whose padded
+# sequence would grow the tile work by more than this factor
+PAD_OVERHEAD_LIMIT = 1.25
+
+
+def _pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (bucket label for a shape dimension)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
+    """Bucket every dim to the next pow2 except the exact trailing dim."""
+    dims = tuple(int(d) for d in shape)
+    return tuple(_pow2_bucket(d) for d in dims[:-1]) + (dims[-1],)
+
+
+def table_key(kernel: str, dtype, shape: Sequence[int]) -> str:
+    """Canonical string key: ``kernel|dtype|b1x2x512x128``-style buckets."""
+    name = np.dtype(dtype).name
+    dims = "x".join(str(d) for d in shape_bucket(shape))
+    return f"{kernel}|{name}|{dims}"
+
+
+class AutotuneTable:
+    """The persisted (kernel, dtype, shape bucket) -> blocks mapping."""
+
+    def __init__(self, entries: Optional[Dict[str, List[int]]] = None):
+        self.entries: Dict[str, List[int]] = dict(entries or {})
+
+    # -- persistence -------------------------------------------------------
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_TABLE_PATH) -> "AutotuneTable":
+        """Load the committed table; a missing file is an empty table (the
+        bit-identical legacy fallback everywhere)."""
+        try:
+            with open(path, encoding="utf-8") as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return cls()
+        return cls(data.get("entries", {}))
+
+    def save(self, path: str = DEFAULT_TABLE_PATH) -> None:
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump({"version": TABLE_VERSION,
+                       "entries": dict(sorted(self.entries.items()))},
+                      f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    # -- access ------------------------------------------------------------
+
+    def lookup(self, kernel: str, dtype,
+               shape: Sequence[int]) -> Optional[Tuple[int, ...]]:
+        hit = self.entries.get(table_key(kernel, dtype, shape))
+        return tuple(int(b) for b in hit) if hit else None
+
+    def record(self, kernel: str, dtype, shape: Sequence[int],
+               blocks: Sequence[int]) -> None:
+        self.entries[table_key(kernel, dtype, shape)] = [int(b)
+                                                         for b in blocks]
+
+
+_TABLE: Optional[AutotuneTable] = None
+
+
+def get_table() -> AutotuneTable:
+    """Process-wide table loaded once from the committed artifact."""
+    global _TABLE
+    if _TABLE is None:
+        _TABLE = AutotuneTable.load()
+    return _TABLE
+
+
+@contextmanager
+def override(table: AutotuneTable) -> Iterator[AutotuneTable]:
+    """Swap the process-wide table (tests pin deterministic entries)."""
+    global _TABLE
+    prev = _TABLE
+    _TABLE = table
+    try:
+        yield table
+    finally:
+        _TABLE = prev
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation (padding-aware pruning)
+# ---------------------------------------------------------------------------
+
+def effective_flash_blocks(S: int, block_q: int,
+                           block_k: int) -> Tuple[int, int]:
+    """The kernel's shrink-to-divide rule (flash_attention_tpu)."""
+    bq, bk = min(block_q, S), min(block_k, S)
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    return bq, bk
+
+
+def padded_seq(S: int, block_q: int, block_k: int) -> int:
+    """Smallest padded length divisible by both blocks (pow2 candidates:
+    a multiple of the larger block is a multiple of both)."""
+    m = max(block_q, block_k)
+    return -(-S // m) * m
+
+
+def flash_candidates(S: int, *, causal: bool = True
+                     ) -> List[Tuple[int, int, int]]:
+    """(block_q, block_k, padded_S) candidates for sequence length ``S``.
+
+    Divisible candidates come from the kernel's own shrink rule (deduped
+    to distinct effective pairs).  For causal attention, non-divisible
+    candidates are admitted via exact end-padding when the padded tile
+    work stays within PAD_OVERHEAD_LIMIT; non-causal padding would leak
+    probability mass to the padded keys, so those are pruned outright.
+    """
+    out: List[Tuple[int, int, int]] = []
+    seen = set()
+    for bq in FLASH_BLOCK_CANDIDATES:
+        for bk in FLASH_BLOCK_CANDIDATES:
+            ebq, ebk = effective_flash_blocks(S, bq, bk)
+            if (ebq, ebk, S) not in seen:
+                seen.add((ebq, ebk, S))
+                out.append((ebq, ebk, S))
+            if not causal:
+                continue
+            Sp = padded_seq(S, bq, bk)
+            if Sp == S or Sp > S * PAD_OVERHEAD_LIMIT:
+                continue
+            if (bq, bk, Sp) not in seen:
+                seen.add((bq, bk, Sp))
+                out.append((bq, bk, Sp))
+    return out
+
+
+def rmsnorm_candidates(N: int) -> List[int]:
+    """Distinct effective row-block candidates for ``N`` rows (the kernel
+    shrinks non-dividing blocks, so dedupe to what would actually run)."""
+    out: List[int] = []
+    for rows in RMSNORM_ROW_CANDIDATES:
+        r = min(rows, N)
+        while N % r:
+            r //= 2
+        if r not in out:
+            out.append(r)
+    return out
+
+
+def decode_page_candidates(S: int) -> List[int]:
+    """Page sizes dividing the cache length (block tables need whole pages)."""
+    return [p for p in DECODE_PAGE_CANDIDATES if S % p == 0] or [S]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch plans (what ops.py consults per call)
+# ---------------------------------------------------------------------------
+
+def plan_flash(shape: Sequence[int], dtype, *, causal: bool,
+               table: Optional[AutotuneTable] = None
+               ) -> Tuple[int, int, int, bool]:
+    """(block_q, block_k, padded_S, from_table) for a (B, H, S, D) call.
+
+    Bucket entries are re-validated against the actual shape: a block pair
+    that divides S applies directly; a non-dividing pair applies through
+    causal-exact padding when within PAD_OVERHEAD_LIMIT; anything else
+    falls back to the legacy fixed blocks (``from_table=False`` means the
+    call is bit-identical to the pre-autotune path).
+    """
+    S = int(shape[2])
+    table = get_table() if table is None else table
+    hit = table.lookup("flash_attention", dtype, shape)
+    if hit is not None and len(hit) == 2:
+        bq, bk = hit
+        if bq <= S and S % bq == 0 and S % bk == 0:
+            return bq, bk, S, True
+        if causal:
+            Sp = padded_seq(S, bq, bk)
+            if Sp <= S * PAD_OVERHEAD_LIMIT:
+                return bq, bk, Sp, True
+    return FLASH_DEFAULT[0], FLASH_DEFAULT[1], S, False
+
+
+def plan_rmsnorm(shape: Sequence[int], dtype,
+                 table: Optional[AutotuneTable] = None) -> Tuple[int, bool]:
+    """(block_rows, from_table) for an (N, D) call.  Correctness never
+    depends on the choice (the kernel shrinks non-dividing blocks), so any
+    table hit passes straight through."""
+    table = get_table() if table is None else table
+    hit = table.lookup("rmsnorm", dtype, shape)
+    if hit is not None and len(hit) == 1:
+        return hit[0], True
+    return RMSNORM_DEFAULT_ROWS, False
+
+
+def plan_decode_page(shape: Sequence[int], dtype,
+                     table: Optional[AutotuneTable] = None
+                     ) -> Tuple[int, bool]:
+    """(page_size, from_table) for a (B, H, S, HD)-shaped paged decode.
+    Pages must tile the cache length exactly; a non-dividing entry falls
+    back to the default."""
+    S = int(shape[2])
+    table = get_table() if table is None else table
+    hit = table.lookup("decode_attention", dtype, shape)
+    if hit is not None and len(hit) == 1 and S % hit[0] == 0:
+        return hit[0], True
+    return (DECODE_DEFAULT_PAGE if S % DECODE_DEFAULT_PAGE == 0 else S,
+            False)

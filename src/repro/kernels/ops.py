@@ -10,15 +10,30 @@ from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.rmsnorm import rmsnorm_tpu, rmsnorm_residual_tpu
 
 
-@partial(jax.jit, static_argnames=("causal", "interpret"))
-def _flash_bhsd(q, k, v, causal: bool, interpret: bool):
-    return flash_attention_tpu(q, k, v, causal=causal, interpret=interpret)
+@partial(jax.jit, static_argnames=("causal", "interpret", "block_q",
+                                   "block_k", "pad_to"))
+def _flash_bhsd(q, k, v, causal: bool, interpret: bool, block_q: int,
+                block_k: int, pad_to: int):
+    # pad_to > S only when the autotune table chose non-dividing blocks for
+    # a causal call; end-padding the keys is exact there (padded rows sit
+    # strictly above the diagonal of every real query row).  The no-entry
+    # path arrives with pad_to == S and the legacy fixed blocks, tracing
+    # the exact pre-autotune computation.
+    S = q.shape[2]
+    if pad_to > S:
+        cfg = ((0, 0), (0, 0), (0, pad_to - S), (0, 0))
+        q, k, v = jnp.pad(q, cfg), jnp.pad(k, cfg), jnp.pad(v, cfg)
+    o = flash_attention_tpu(q, k, v, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=interpret)
+    return o[:, :, :S] if pad_to > S else o
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -36,7 +51,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    o = _flash_bhsd(qt, kt, vt, causal, interpret)
+    bq, bk, pad_to, _ = autotune.plan_flash(qt.shape, qt.dtype, causal=causal)
+    o = _flash_bhsd(qt, kt, vt, causal, interpret, bq, bk, pad_to)
     return o.transpose(0, 2, 1, 3)
 
 
@@ -46,7 +62,9 @@ def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
     if backend == "xla":
         return _ref.rmsnorm_ref(x, w, eps=eps)
     shape = x.shape
-    y = rmsnorm_tpu(x.reshape(-1, shape[-1]), w, eps=eps,
+    x2 = x.reshape(-1, shape[-1])
+    rows, _ = autotune.plan_rmsnorm(x2.shape, x2.dtype)
+    y = rmsnorm_tpu(x2, w, eps=eps, block_rows=rows,
                     interpret=(backend == "interpret"))
     return y.reshape(shape)
 
@@ -56,7 +74,9 @@ def rmsnorm_residual(x: jax.Array, residual: jax.Array, w: jax.Array, *,
     if backend == "xla":
         return _ref.rmsnorm_residual_ref(x, residual, w, eps=eps)
     shape = x.shape
-    y, s = rmsnorm_residual_tpu(x.reshape(-1, shape[-1]),
-                                residual.reshape(-1, shape[-1]), w, eps=eps,
+    x2 = x.reshape(-1, shape[-1])
+    rows, _ = autotune.plan_rmsnorm(x2.shape, x2.dtype)
+    y, s = rmsnorm_residual_tpu(x2, residual.reshape(-1, shape[-1]), w,
+                                eps=eps, block_rows=rows,
                                 interpret=(backend == "interpret"))
     return y.reshape(shape), s.reshape(shape)

@@ -278,6 +278,54 @@ def test_slow_marker_negatives():
 
 
 # ---------------------------------------------------------------------------
+# block-discipline
+# ---------------------------------------------------------------------------
+
+def test_block_discipline_flags_literal_blocks_at_call_sites():
+    bad = """\
+    o = flash_attention_tpu(q, k, v, causal=True, block_q=512, block_k=512)
+    y = rmsnorm_tpu(x, w, block_rows=256)
+    """
+    out = lint(bad, "src/repro/models/new.py", rule="block-discipline")
+    assert names(out) == ["block-discipline"] * 3
+    assert "block_q=512" in out[0].message
+    assert "autotune" in out[0].message
+
+
+def test_block_discipline_negatives():
+    # variables / table-planned blocks are the sanctioned route
+    routed = """\
+    bq, bk, pad_to, hit = autotune.plan_flash(q.shape, q.dtype, causal=True)
+    o = flash_attention_tpu(q, k, v, block_q=bq, block_k=bk)
+    """
+    assert lint(routed, "src/repro/kernels/ops2.py",
+                rule="block-discipline") == []
+    # kernel signature DEFAULTS are not call sites
+    signature = """\
+    def flash_attention_tpu(q, k, v, *, block_q=512, block_k=512):
+        return q
+    """
+    assert lint(signature, "src/repro/kernels/flash2.py",
+                rule="block-discipline") == []
+    # the table module owns its literals, and analysis/ is out of scope
+    literal = "t.record('flash_attention', d, s, (512, 512))\n"
+    assert lint(literal, "src/repro/kernels/autotune.py",
+                rule="block-discipline") == []
+    assert lint("f(block_q=512)\n", "src/repro/analysis/fixture.py",
+                rule="block-discipline") == []
+    # non-block int kwargs stay silent
+    assert lint("f(block_size=512, rows=4)\n", "src/repro/models/new.py",
+                rule="block-discipline") == []
+
+
+def test_block_discipline_suppression():
+    src = ("o = f(q, block_q=128)"
+           "  # repolint: disable=block-discipline\n")
+    assert lint(src, "src/repro/models/new.py",
+                rule="block-discipline") == []
+
+
+# ---------------------------------------------------------------------------
 # framework: suppressions, parse errors, scoping
 # ---------------------------------------------------------------------------
 

@@ -208,6 +208,112 @@ def test_predictive_point_aliases_rel_artifact():
         bench_scheduler.artifact_path("traces", "month-50k-rel", 0)
 
 
+def ksnap(**kernels):
+    return {"bench": "bench_kernels", "kernels": kernels}
+
+
+KBASE = ksnap(
+    flash_x={"block_q": 512, "block_k": 512, "from_table": True,
+             "flops": 1e9, "hbm_bytes": 1e6, "roofline_frac": 0.94,
+             "max_err": 1e-3, "tol": 3e-2, "wall_s": 0.01},
+    rms_x={"block_rows": 512, "from_table": True, "flops": 1e7,
+           "hbm_bytes": 1e7, "roofline_frac": 1.0, "max_err": 0.0,
+           "tol": 1e-5, "wall_s": 0.2},
+)
+
+
+def test_kernel_identical_snapshots_pass():
+    assert check_bench.compare_kernel_snapshots(
+        KBASE, copy.deepcopy(KBASE)) == []
+    assert check_bench.kernel_tolerance_violations(KBASE) == []
+
+
+def test_kernel_deterministic_keys_gate_exactly():
+    """Blocks / analytic terms are functions of the committed autotune
+    table — ANY drift is the table-consistency failure."""
+    for key, val in (("block_q", 256), ("from_table", False),
+                     ("roofline_frac", 0.93999), ("flops", 1e9 + 1)):
+        cand = copy.deepcopy(KBASE)
+        cand["kernels"]["flash_x"][key] = val
+        out = check_bench.compare_kernel_snapshots(KBASE, cand)
+        assert len(out) == 1 and key in out[0], key
+
+
+def test_kernel_max_err_growth_gate():
+    cand = copy.deepcopy(KBASE)
+    cand["kernels"]["flash_x"]["max_err"] = 1.9e-3       # < 2x: fine
+    assert check_bench.compare_kernel_snapshots(KBASE, cand) == []
+    cand["kernels"]["flash_x"]["max_err"] = 2.5e-3       # > 2x: regression
+    out = check_bench.compare_kernel_snapshots(KBASE, cand)
+    assert len(out) == 1 and "max_err" in out[0]
+    # a zero-error baseline tolerates only the absolute floor
+    cand = copy.deepcopy(KBASE)
+    cand["kernels"]["rms_x"]["max_err"] = 1e-6
+    out = check_bench.compare_kernel_snapshots(KBASE, cand)
+    assert len(out) == 1 and "rms_x" in out[0]
+
+
+def test_kernel_wall_gate_and_no_wall():
+    cand = copy.deepcopy(KBASE)
+    cand["kernels"]["rms_x"]["wall_s"] = 0.9             # > 20% + floor
+    out = check_bench.compare_kernel_snapshots(KBASE, cand)
+    assert len(out) == 1 and "wall_s" in out[0]
+    assert check_bench.compare_kernel_snapshots(
+        KBASE, cand, check_wall=False) == []
+    # under the absolute noise floor: fine even at huge relative growth
+    cand["kernels"]["rms_x"]["wall_s"] = 0.4
+    assert check_bench.compare_kernel_snapshots(KBASE, cand) == []
+
+
+def test_kernel_tolerance_gate_needs_no_baseline():
+    cand = copy.deepcopy(KBASE)
+    cand["kernels"]["flash_x"]["max_err"] = 0.5          # way over tol
+    out = check_bench.kernel_tolerance_violations(cand)
+    assert len(out) == 1 and "tolerance" in out[0]
+
+
+def test_kernel_new_points_are_ignored():
+    cand = copy.deepcopy(KBASE)
+    cand["kernels"]["decode_new"] = {"page_size": 64, "max_err": 0.0,
+                                     "tol": 0.0}
+    assert check_bench.compare_kernel_snapshots(KBASE, cand) == []
+
+
+def test_kernel_snapshot_cli_roundtrip(tmp_path, capsys):
+    base_p, cand_p = tmp_path / "base.json", tmp_path / "cand.json"
+    base_p.write_text(json.dumps(KBASE))
+    cand = copy.deepcopy(KBASE)
+    cand["kernels"]["flash_x"]["block_k"] = 128
+    cand_p.write_text(json.dumps(cand))
+    assert check_bench.main(
+        ["--snapshot", "kernels", "--baseline", str(base_p),
+         "--candidate", str(base_p), "--json",
+         "--no-wall"]) == check_bench.EXIT_OK
+    out = json.loads(capsys.readouterr().out)
+    assert out["snapshot"] == "kernels" and out["points_compared"] == 2
+    assert check_bench.main(
+        ["--snapshot", "kernels", "--baseline", str(base_p),
+         "--candidate", str(cand_p), "--json",
+         "--no-wall"]) == check_bench.EXIT_REGRESSION
+    out = json.loads(capsys.readouterr().out)
+    assert len(out["violations"]) == 1 and "block_k" in out["violations"][0]
+    assert check_bench.main(
+        ["--snapshot", "kernels", "--baseline", str(base_p),
+         "--candidate", str(tmp_path / "nope.json"),
+         "--json"]) == check_bench.EXIT_MISSING_SNAPSHOT
+    capsys.readouterr()
+
+
+def test_kernel_git_baseline_uses_kernel_filename():
+    """--snapshot kernels must diff against the committed
+    BENCH_kernels.json, not the scheduler snapshot (skips without git)."""
+    try:
+        base = check_bench.load_baseline("git:HEAD", "BENCH_kernels.json")
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        pytest.skip("no committed kernel snapshot in git HEAD")
+    assert "kernels" in base
+
+
 def test_git_baseline_loads_committed_snapshot():
     """`--baseline git:HEAD` must parse the committed snapshot (skips when
     git/HEAD is unavailable, e.g. a tarball checkout)."""

@@ -19,7 +19,8 @@ def test_flash_attention_interpret_vs_ref(shape, dtype, causal):
     B, H, S, D = shape
     keys = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 3)
     q, k, v = (jax.random.normal(kk, shape, dtype) for kk in keys)
-    o = flash_attention_tpu(q, k, v, causal=causal, block_q=128, block_k=128,
+    bq = bk = 128      # fixed probe blocks; tuned choices live in autotune
+    o = flash_attention_tpu(q, k, v, causal=causal, block_q=bq, block_k=bk,
                             interpret=True)
     r = ref.attention_ref(q, k, v, causal=causal)
     tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
